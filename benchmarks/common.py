@@ -1,0 +1,51 @@
+"""Shared benchmark helpers: timed LBM runs + kernel-variant grid.
+
+CPU MFLUPS here are NOT comparable to the paper's GTX Titan numbers (one
+CPU core vs a 288 GB/s GPU); what IS comparable — and what benchmarks
+assert on — are the paper's structural claims: relative ordering of kernel
+variants, dependence on tile utilisation (not porosity), layout transaction
+counts, and channel-utilisation curves.  TPU-projected numbers come from
+the dry-run roofline terms (benchmarks/roofline_table.py).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core import collision as C
+from repro.core.engine import LBMConfig, SparseTiledLBM
+
+VARIANTS = (
+    ("rw_only", None, None),
+    ("propagation_only", None, None),
+    ("full", "lbgk", "incompressible"),
+    ("full", "lbgk", "quasi_compressible"),
+    ("full", "lbmrt", "incompressible"),
+    ("full", "lbmrt", "quasi_compressible"),
+)
+
+
+def variant_name(mode, model, fluid):
+    if mode != "full":
+        return mode
+    return f"{model}_{'incompr' if fluid == 'incompressible' else 'qcompr'}"
+
+
+def timed_mflups(geometry, *, mode="full", model="lbgk",
+                 fluid="incompressible", layout="paper", dtype="float32",
+                 steps=20, warmup=3, boundaries=(), periodic=(False,) * 3):
+    cfg = LBMConfig(
+        collision=C.CollisionConfig(model=model or "lbgk",
+                                    fluid=fluid or "incompressible", tau=0.6),
+        layout_scheme=layout, dtype=dtype, kernel_mode=mode,
+        boundaries=boundaries, periodic=periodic)
+    eng = SparseTiledLBM(geometry, cfg)
+    eng.step(warmup)
+    jax.block_until_ready(eng.f)
+    t0 = time.perf_counter()
+    eng.step(steps)
+    jax.block_until_ready(eng.f)
+    dt = (time.perf_counter() - t0) / steps
+    return eng.n_fluid_nodes / dt / 1e6, eng

@@ -1,0 +1,65 @@
+"""The 40-cell (arch x shape) roofline table from the dry-run JSONs.
+
+Reads results/dryrun/*.json (produced by scripts_dryrun_sweep.sh /
+repro.launch.dryrun) and renders EXPERIMENTS.md §Roofline rows.  No
+compilation happens here — run the sweep first."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.configs import ARCHS, LONG_CONTEXT_ARCHS, SHAPES
+
+
+def load(results_dir="results/dryrun", mesh="single"):
+    rows = {}
+    for f in glob.glob(os.path.join(results_dir, f"*_{mesh}.json")):
+        for c in json.load(open(f)):
+            rows[(c["arch"], c["shape"])] = c
+    return rows
+
+
+def render(rows, include_multi=False):
+    hdr = ("| arch | shape | compute s | memory s | collective s | dominant "
+           "| 6ND/HLO | roofline frac | fits HBM |")
+    lines = [hdr, "|" + "---|" * 9]
+    for arch in ARCHS:
+        for shape in SHAPES:
+            if shape == "long_500k" and arch not in LONG_CONTEXT_ARCHS:
+                lines.append(f"| {arch} | {shape} | — | — | — | skipped "
+                             "(full attention) | — | — | — |")
+                continue
+            c = rows.get((arch, shape))
+            if c is None:
+                lines.append(f"| {arch} | {shape} | MISSING | | | | | | |")
+                continue
+            if not c.get("ok"):
+                lines.append(f"| {arch} | {shape} | FAILED: "
+                             f"{c.get('error', '?')[:60]} | | | | | | |")
+                continue
+            fits = c.get("hbm_need",
+                         c["peak_bytes_per_device"] + c["argument_bytes"]) \
+                < 16 * 2 ** 30
+            lines.append(
+                f"| {arch} | {shape} | {c['t_compute']:.3f} "
+                f"| {c['t_memory']:.3f} | {c['t_collective']:.3f} "
+                f"| {c['dominant']} | {c['useful_flops_ratio']:.3f} "
+                f"| {c['roofline_fraction']:.3f} "
+                f"| {'yes' if fits else 'NO'} |")
+    return "\n".join(lines)
+
+
+def main():
+    rows = load()
+    print(render(rows))
+    ok = sum(1 for c in rows.values() if c.get("ok"))
+    print(f"\n# {ok} cells OK (single-pod)")
+    rows_m = load(mesh="multi")
+    ok_m = sum(1 for c in rows_m.values() if c.get("ok"))
+    print(f"# {ok_m} cells OK (multi-pod)")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

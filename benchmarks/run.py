@@ -1,0 +1,55 @@
+"""Benchmark orchestrator — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run            # all (CPU-sized)
+    PYTHONPATH=src python -m benchmarks.run --only spheres,cavity3d
+
+Each module prints CSV and asserts the paper claims it reproduces
+(orderings / exact transaction counts / utilisation curves).  CPU MFLUPS
+are not GPU-comparable — see benchmarks/common.py; TPU-projected numbers
+live in the dry-run roofline (benchmarks/roofline_table.py).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+MODULES = [
+    "flops_table2",          # Table 2
+    "channel_utilisation",   # Figs 8/9/10
+    "cavity3d",              # Fig 14 / Table 3
+    "layout_sp",             # Table 4 / §3.2.1
+    "layout_impact",         # Table 5 / §3.2
+    "channel_faces",         # Fig 16
+    "spheres",               # Tables 6/7 + Fig 20
+    "vessel",                # Tables 8/9
+    "utilisation_scaling",   # Fig 19
+    "roofline_table",        # task §Roofline (reads results/dryrun)
+]
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of module names")
+    args = ap.parse_args(argv)
+    todo = args.only.split(",") if args.only else MODULES
+    failures = 0
+    for name in todo:
+        print(f"\n===== benchmarks.{name} =====")
+        t0 = time.time()
+        try:
+            mod = __import__(f"benchmarks.{name}", fromlist=["main"])
+            mod.main()
+            print(f"# {name}: OK in {time.time() - t0:.1f}s")
+        except Exception:
+            failures += 1
+            traceback.print_exc()
+            print(f"# {name}: FAILED")
+    print(f"\n{len(todo) - failures}/{len(todo)} benchmark modules passed")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,42 @@
+"""Paper Fig 19 — normalized performance vs average tile utilisation.
+
+Collects (eta_t, normalized MFLUPS) across sphere porosities and vessel
+cases; fits the proportionality slope alpha (paper: perf ~ alpha*eta_t,
+alpha in [0.6, 1.0] depending on compute weight) and asserts performance
+correlates with eta_t rather than porosity."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import timed_mflups
+from repro.data.geometry import (aorta_coarctation, cavity3d, random_spheres,
+                                 vessel_aneurysm)
+
+
+def main(steps=8):
+    mf_dense, _ = timed_mflups(cavity3d(48), steps=steps)
+    pts = []
+    for phi in (0.9, 0.6, 0.3, 0.15):
+        g = random_spheres(box=64, porosity=phi, diameter=16, seed=0)
+        mf, eng = timed_mflups(g, steps=steps, periodic=(True, True, True))
+        pts.append((eng.tiling.porosity, eng.tiling.tile_utilisation,
+                    mf / mf_dense))
+    for g in (vessel_aneurysm((96, 80, 80)), aorta_coarctation((48, 80, 160))):
+        mf, eng = timed_mflups(g, steps=steps)
+        pts.append((eng.tiling.porosity, eng.tiling.tile_utilisation,
+                    mf / mf_dense))
+    print("porosity,eta_t,normalized_perf")
+    for po, eta, rel in pts:
+        print(f"{po:.4f},{eta:.4f},{rel:.4f}")
+    po = np.array([p[0] for p in pts])
+    eta = np.array([p[1] for p in pts])
+    rel = np.array([p[2] for p in pts])
+    c_eta = np.corrcoef(eta, rel)[0, 1]
+    c_por = np.corrcoef(po, rel)[0, 1]
+    print(f"# corr(perf, eta_t)={c_eta:.3f}  corr(perf, porosity)={c_por:.3f}")
+    assert c_eta > c_por, "perf must track eta_t better than porosity (Fig 19/20)"
+    return pts
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""Quickstart: the paper's sparse-tiled LBM in ~30 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core import collision as C
+from repro.core.boundary import BoundarySpec
+from repro.core.engine import LBMConfig, SparseTiledLBM
+from repro.data.geometry import LID, cavity3d
+
+# lid-driven cavity, 32^3 nodes, lid moving in +x at the top z face
+geometry = cavity3d(32)
+
+cfg = LBMConfig(
+    collision=C.CollisionConfig(model="lbgk", fluid="incompressible", tau=0.6),
+    layout_scheme="paper",          # the paper's L_XYZ/L_YXZ/L_zigzagNE blocks
+    dtype="float32",
+    boundaries=((LID, BoundarySpec("velocity", (0, 0, -1),
+                                   velocity=(0.05, 0.0, 0.0))),),
+)
+engine = SparseTiledLBM(geometry, cfg)
+print(f"tiles={engine.tiling.num_tiles}  "
+      f"tile utilisation eta_t={engine.tiling.tile_utilisation:.3f}  "
+      f"fluid nodes={engine.n_fluid_nodes:,}")
+
+engine.run(500)
+rho, u = engine.fields_dense()
+speed = np.linalg.norm(u, axis=0)
+print(f"mass={engine.total_mass():.3f}  max |u|={np.nanmax(speed):.4f} lu")
+print("mid-plane x-velocity profile (z column through the centre):")
+for z in range(2, 32, 4):
+    print(f"  z={z:2d}  u_x={u[0, 16, 16, z]: .5f}")

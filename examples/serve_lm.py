@@ -1,0 +1,10 @@
+"""Batched serving demo: fixed-slot continuous batching with greedy decode.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    main(["--arch", "gemma2-2b", "--smoke", "--requests", "6",
+          "--slots", "3", "--prompt-len", "24", "--max-new", "12",
+          "--max-len", "64"])

@@ -1,0 +1,171 @@
+"""Architecture registry + input-shape grid.
+
+``get_config(name)`` returns the FULL published config; ``get_smoke(name)``
+a reduced same-family config for CPU smoke tests.  ``input_specs(cfg, shape)``
+builds ShapeDtypeStruct stand-ins for every model input of a (arch x shape)
+cell — weak-type-correct, shardable, no device allocation (dry-run pattern).
+
+Shape grid (LM family — seq_len x global_batch):
+    train_4k     4,096 x 256   training        -> train_step
+    prefill_32k 32,768 x  32   inference       -> prefill_step
+    decode_32k  32,768 x 128   one new token   -> serve_step
+    long_500k  524,288 x   1   one new token   -> serve_step (sub-quadratic only)
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+ARCHS = (
+    "starcoder2-3b",
+    "chatglm3-6b",
+    "qwen1.5-32b",
+    "gemma2-2b",
+    "paligemma-3b",
+    "musicgen-large",
+    "rwkv6-3b",
+    "deepseek-moe-16b",
+    "moonshot-v1-16b-a3b",
+    "zamba2-2.7b",
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str          # 'train' | 'prefill' | 'decode'
+    seq_len: int
+    global_batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", "train", 4_096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32_768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524_288, 1),
+}
+
+# long_500k needs sub-quadratic attention: it RUNS for the SSM (rwkv6), the
+# hybrid (zamba2: O(1) SSM state + shared-attn KV) and gemma2 (half the
+# layers are 4k-windowed; the global layers keep full-length KV — noted as
+# the memory driver in EXPERIMENTS.md).  Pure full-attention archs skip it
+# (recorded in DESIGN.md §Arch-applicability).
+LONG_CONTEXT_ARCHS = ("rwkv6-3b", "zamba2-2.7b", "gemma2-2b")
+
+
+def _module(name: str):
+    return importlib.import_module(f"repro.configs.{name.replace('-', '_').replace('.', '_')}")
+
+
+def get_config(name: str) -> ModelConfig:
+    return _module(name).CONFIG
+
+
+def get_smoke(name: str) -> ModelConfig:
+    return _module(name).SMOKE
+
+
+def cells(include_skipped: bool = False):
+    """All (arch, shape) cells; skipped long_500k cells excluded by default."""
+    out = []
+    for arch in ARCHS:
+        for shape in SHAPES.values():
+            skipped = shape.name == "long_500k" and arch not in LONG_CONTEXT_ARCHS
+            if skipped and not include_skipped:
+                continue
+            out.append((arch, shape.name))
+    return out
+
+
+# --------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins, no allocation)
+# --------------------------------------------------------------------------
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    """Model-input ShapeDtypeStructs for one cell.
+
+    train  -> {tokens, labels[, prefix_embeds]}
+    prefill-> {tokens[, prefix_embeds]}
+    decode -> {tokens} (the KV cache is built via jax.eval_shape(init_cache))
+    """
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.family == "audio":
+        tok = _sds((b, s, cfg.num_codebooks), jnp.int32)
+        lab = _sds((b, s, cfg.num_codebooks), jnp.int32)
+    elif cfg.family == "vlm":
+        # prefix embeddings come from the STUB SigLIP tower; text fills the rest
+        s_text = s - cfg.prefix_tokens
+        tok = _sds((b, s_text), jnp.int32)
+        lab = _sds((b, s_text), jnp.int32)
+    else:
+        tok = _sds((b, s), jnp.int32)
+        lab = _sds((b, s), jnp.int32)
+
+    if shape.kind == "train":
+        out = {"tokens": tok, "labels": lab}
+    elif shape.kind == "prefill":
+        out = {"tokens": tok}
+    else:  # decode: one new token
+        if cfg.family == "audio":
+            out = {"tokens": _sds((b, 1, cfg.num_codebooks), jnp.int32)}
+        else:
+            out = {"tokens": _sds((b, 1), jnp.int32)}
+        return out
+    if cfg.family == "vlm":
+        out["prefix_embeds"] = _sds((b, cfg.prefix_tokens, cfg.d_model),
+                                    jnp.bfloat16)
+    return out
+
+
+# --------------------------------------------------------------------------
+# exact parameter statistics (eval_shape — no allocation)
+# --------------------------------------------------------------------------
+_STATS_CACHE: dict = {}
+
+
+def param_stats(cfg: ModelConfig) -> tuple[int, int]:
+    """(total, active) parameters, exact.
+
+    total  — abstract-eval of the real init (ground truth for any family).
+    active — FLOPs-relevant parameters per token: MoE counts top_k/E of the
+    routed experts; zamba2's SHARED block counts once per invocation (param
+    REUSE means active > total for the hybrid — correct for 6*N*D).
+    """
+    if cfg.name in _STATS_CACHE:
+        return _STATS_CACHE[cfg.name]
+    import numpy as _np
+
+    from repro.models.model import CausalLM
+
+    shapes = jax.eval_shape(CausalLM(cfg).init, jax.random.PRNGKey(0))
+
+    def size(t):
+        return sum(int(_np.prod(l.shape)) for l in jax.tree.leaves(t))
+
+    total = size(shapes)
+    active = total
+    if cfg.family == "moe":
+        moe = shapes["stack"]["moe_layers"]["moe"]
+        routed = size({k: v for k, v in moe.items()
+                       if k in ("gate", "up", "down")})
+        active = int(total - routed * (1 - cfg.moe.top_k / cfg.moe.n_experts))
+    elif cfg.family == "hybrid":
+        groups = cfg.n_layers // cfg.attn_every
+        shared = size(shapes["stack"]["shared"])
+        active = int(total + (groups - 1) * shared)
+    _STATS_CACHE[cfg.name] = (total, active)
+    return total, active
+
+
+__all__ = [
+    "ARCHS", "SHAPES", "LONG_CONTEXT_ARCHS", "ShapeSpec",
+    "cells", "get_config", "get_smoke", "input_specs", "param_stats",
+]

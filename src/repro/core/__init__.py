@@ -1,0 +1,22 @@
+"""Core sparse-tiled LBM — the paper's primary contribution.
+
+Public API:
+    SparseTiledLBM, LBMConfig  — the solver
+    DenseLBM                   — dense baseline
+    CollisionConfig            — collision/fluid model selection
+    BoundarySpec               — open boundaries (Zou-He / pressure)
+    tile_geometry, Tiling      — host-side tiler (Algorithm 1)
+"""
+from .boundary import BoundarySpec
+from .collision import CollisionConfig
+from .dense import DenseLBM
+from .engine import LBMConfig, SparseTiledLBM
+from .lattice import d2q9, d3q19, get_lattice
+from .tiling import FLUID, INLET, OUTLET, SOLID, Tiling, tile_geometry
+
+__all__ = [
+    "BoundarySpec", "CollisionConfig", "DenseLBM", "LBMConfig",
+    "SparseTiledLBM", "Tiling", "tile_geometry",
+    "d2q9", "d3q19", "get_lattice",
+    "FLUID", "INLET", "OUTLET", "SOLID",
+]

@@ -1,0 +1,187 @@
+"""SparseTiledLBM — the paper's solver as a composable JAX module.
+
+One LBM iteration (paper Algorithm 2, fused): pull-streaming (with half-way
+bounce-back folded into the gather tables), open-boundary reconstruction,
+collision, solid masking.  Two copies of f are kept implicitly by functional
+purity + buffer donation (the paper's explicit f / f' pair).
+
+The same engine runs:
+* on CPU for validation/benchmarks (this container),
+* distributed via ``repro.dist.lbm_sharded`` (slab decomposition of the tile
+  grid — the multi-GPU extension the paper leaves as future work),
+* with the Pallas collision kernel (``repro.kernels``) swapped in for the
+  pure-jnp collision via ``use_kernel=True``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import collision as col
+from .boundary import BoundarySpec, apply_open_boundary
+from .lattice import get_lattice
+from .streaming import build_stream_tables
+from .tiling import SOLID, Tiling, tile_geometry, untile
+
+
+@dataclasses.dataclass(frozen=True)
+class LBMConfig:
+    lattice: str = "D3Q19"
+    collision: col.CollisionConfig = dataclasses.field(
+        default_factory=col.CollisionConfig
+    )
+    a: int = 4                                # nodes per tile edge
+    layout_scheme: str = "xyz"                # 'xyz' | 'paper' | ...
+    dtype: str = "float32"
+    periodic: tuple[bool, bool, bool] = (False, False, False)
+    # map node-type value -> open-boundary spec (walls need no spec:
+    # bounce-back is implicit for SOLID neighbours)
+    boundaries: tuple[tuple[int, BoundarySpec], ...] = ()
+    force: tuple[float, float, float] | None = None
+    rho0: float = 1.0
+    u0: tuple[float, float, float] = (0.0, 0.0, 0.0)
+    use_kernel: bool = False                  # Pallas collision kernel
+    kernel_interpret: bool = True             # interpret mode (CPU container)
+    # paper §4.1 kernel variants: 'full' | 'propagation_only' | 'rw_only'
+    kernel_mode: str = "full"
+
+
+class SparseTiledLBM:
+    """Sparse tiled LBM engine (the paper's contribution)."""
+
+    def __init__(self, node_type: np.ndarray, cfg: LBMConfig):
+        self.cfg = cfg
+        self.lat = get_lattice(cfg.lattice)
+        self.tiling: Tiling = tile_geometry(node_type, cfg.a)
+        self.tables = build_stream_tables(
+            self.tiling, self.lat, cfg.layout_scheme, cfg.periodic
+        )
+        self.dtype = jnp.dtype(cfg.dtype)
+
+        t, n = self.tiling.num_tiles, self.tiling.nodes_per_tile
+        types = self.tiling.node_types                       # (T, n) canonical
+        self._solid = jnp.asarray(types == SOLID)
+        self._bc_masks = [
+            (jnp.asarray(types == tv), spec) for tv, spec in cfg.boundaries
+        ]
+        self._gather = jnp.asarray(self.tables.gather_idx.reshape(self.lat.q, -1))
+        self._perms = jnp.asarray(self.tables.perms)         # (Q, n)
+        self._inv_perms = jnp.asarray(self.tables.inv_perms)
+
+        self.f = self._initial_state()
+        self._step_fn = jax.jit(self._step, donate_argnums=0)
+        self._multi_cache: dict[int, callable] = {}
+
+    # ------------------------------------------------------------------ init
+    def _initial_state(self) -> jnp.ndarray:
+        t, n = self.tiling.num_tiles, self.tiling.nodes_per_tile
+        rho = jnp.full((t, n), self.cfg.rho0, dtype=self.dtype)
+        u = jnp.broadcast_to(
+            jnp.asarray(self.cfg.u0, self.dtype)[:, None, None], (3, t, n)
+        )
+        feq = col.equilibrium(rho, u, self.lat, self.cfg.collision.fluid)
+        feq = jnp.where(self._solid[None], 0.0, feq)
+        return self._to_storage(feq)
+
+    # ------------------------------------------------------- layout shuffles
+    def _to_storage(self, f_canon: jnp.ndarray) -> jnp.ndarray:
+        """canonical node order -> per-direction storage layout."""
+        if self.cfg.layout_scheme == "xyz":
+            return f_canon
+        return jnp.stack(
+            [f_canon[q][..., self.tables.inv_perms[q]] for q in range(self.lat.q)]
+        )
+
+    def _to_canonical(self, f_store: jnp.ndarray) -> jnp.ndarray:
+        if self.cfg.layout_scheme == "xyz":
+            return f_store
+        return jnp.stack(
+            [f_store[q][..., self.tables.perms[q]] for q in range(self.lat.q)]
+        )
+
+    # ------------------------------------------------------------------ step
+    def _collide(self, f_in):
+        if self.cfg.use_kernel:
+            from repro.kernels import ops as kops
+
+            return kops.collide_tiles(
+                f_in,
+                self._solid,
+                self.lat,
+                self.cfg.collision,
+                force=self.cfg.force,
+                interpret=self.cfg.kernel_interpret,
+            )
+        f_out, _, _ = col.collide(f_in, self.lat, self.cfg.collision, self.cfg.force)
+        return f_out
+
+    def _step(self, f_store: jnp.ndarray) -> jnp.ndarray:
+        q = self.lat.q
+        t, n = self.tiling.num_tiles, self.tiling.nodes_per_tile
+        if self.cfg.kernel_mode == "rw_only":
+            # paper §4.1: read + write the node's own data, no propagation
+            return f_store + 0.0
+        # streaming + bounce-back: one gather per direction (canonical order out)
+        f_in = jnp.take(f_store.reshape(-1), self._gather, axis=0).reshape(q, t, n)
+        if self.cfg.kernel_mode == "propagation_only":
+            return self._to_storage(f_in)
+        # open boundaries (Zou-He NEBB / constant pressure)
+        for mask, spec in self._bc_masks:
+            f_in = apply_open_boundary(f_in, mask, spec, self.lat)
+        f_out = self._collide(f_in)
+        f_out = jnp.where(self._solid[None], 0.0, f_out)
+        return self._to_storage(f_out)
+
+    def step(self, steps: int = 1) -> None:
+        for _ in range(steps):
+            self.f = self._step_fn(self.f)
+
+    def run(self, steps: int) -> None:
+        """Run ``steps`` iterations inside a single jitted fori_loop."""
+        if steps not in self._multi_cache:
+            fn = jax.jit(
+                lambda f: jax.lax.fori_loop(
+                    0, steps, lambda i, x: self._step(x), f
+                ),
+                donate_argnums=0,
+            )
+            self._multi_cache[steps] = fn
+        self.f = self._multi_cache[steps](self.f)
+
+    # ----------------------------------------------------------- diagnostics
+    def macroscopics(self):
+        f_canon = self._to_canonical(self.f)
+        rho, u = col.macroscopics(f_canon, self.lat, self.cfg.collision.fluid)
+        rho = jnp.where(self._solid, self.cfg.rho0, rho)
+        u = jnp.where(self._solid[None], 0.0, u)
+        return rho, u
+
+    def fields_dense(self):
+        """(rho, u) scattered back to the dense padded grid (numpy)."""
+        rho, u = self.macroscopics()
+        rho_d = untile(self.tiling, np.asarray(rho), fill=np.nan)
+        u_d = untile(self.tiling, np.asarray(u), fill=0.0)
+        return rho_d, u_d
+
+    def total_mass(self) -> float:
+        f_canon = self._to_canonical(self.f)
+        fluid = ~self._solid
+        return float(jnp.sum(jnp.where(fluid[None], f_canon, 0.0)))
+
+    # ------------------------------------------------------------ accounting
+    @property
+    def n_fluid_nodes(self) -> int:
+        return self.tiling.n_fluid_nodes
+
+    def bytes_per_step(self) -> int:
+        """Eqn (10) minimum scaled by tile storage (incl. solid slots)."""
+        n_d = self.dtype.itemsize
+        stored = self.tiling.num_tiles * self.tiling.nodes_per_tile
+        return 2 * self.lat.q * n_d * stored
+
+    def mflups(self, seconds_per_step: float) -> float:
+        return self.n_fluid_nodes / seconds_per_step / 1e6

@@ -1,0 +1,202 @@
+"""Per-direction data-block layouts — the paper's Eqns (11)-(13).
+
+A *data block* holds one f_i value for each of the a^3 nodes of a tile.  The
+linear mapping function L(x, y, z) -> offset decides where each node's value
+sits inside the block.  The paper chooses L per lattice direction so that the
+values a neighbouring tile reads during propagation are contiguous (fully
+utilised 32-byte transactions on the GTX Titan; contiguous lane slices on
+TPU).
+
+Three mappings (a = 4):
+
+* L_XYZ     = x + 4y + 16z                      (Eqn 11, row order)
+* L_YXZ     = y + 4x + 16z                      (Eqn 12, x/y swapped)
+* L_zigzagNE: pairs the two z values of each (x, y) column in consecutive
+  offsets and orders (x, y) along north-east anti-diagonals so the NE-facing
+  boundary (x=3 column and y=3 row) lands in few contiguous segments.
+  Eqn (13) in the source PDF is OCR-corrupted (the printed formula is not a
+  bijection); we reconstruct the mapping from Fig. 7's description: "two
+  consecutive memory locations store f_i values for nodes with the same x and
+  y coordinates - only z coordinate differs".  The reconstruction below is a
+  bijection with exactly that structure and reproduces the paper's
+  transaction counts (16+4 for f_NE/f_SE, see tests/benchmarks).
+
+Layout assignment per direction (paper §3.2):
+  XYZ      : O, N, S, T, B, NT, NB, ST, SB
+  YXZ      : E, W, ET, EB, NW, SW, WT, WB
+  zigzagNE : NE, SE
+"""
+from __future__ import annotations
+
+from functools import lru_cache
+
+import numpy as np
+
+from .lattice import Lattice
+
+XYZ = "XYZ"
+YXZ = "YXZ"
+ZIGZAG_NE = "zigzagNE"
+
+PAPER_ASSIGNMENT = {
+    "O": XYZ, "N": XYZ, "S": XYZ, "T": XYZ, "B": XYZ,
+    "NT": XYZ, "NB": XYZ, "ST": XYZ, "SB": XYZ,
+    "E": YXZ, "W": YXZ, "ET": YXZ, "EB": YXZ,
+    "NW": YXZ, "SW": YXZ, "WT": YXZ, "WB": YXZ,
+    "NE": ZIGZAG_NE, "SE": ZIGZAG_NE,
+}
+
+
+def l_xyz(x, y, z, a: int = 4):
+    return x + a * y + a * a * z
+
+
+def l_yxz(x, y, z, a: int = 4):
+    return y + a * x + a * a * z
+
+
+def _zigzag_rank(a: int = 4) -> np.ndarray:
+    """(a, a) rank of each (x, y) for the zigzagNE layout.
+
+    Groups, in order (reconstructed so BOTH f_NE and f_SE propagation reach
+    the paper's 16+4 DP / 12 SP transaction counts, and the partially
+    utilised segments land at offsets 16-19 and 24-27 exactly as in Fig. 7):
+
+      1. y = 0 row, x = 0..a-2              (read by the N-neighbour for SE)
+      2. interior core x <= a-2, 1 <= y <= a-2, NE anti-diagonal order
+      3. y = a-1 row, x = 0..a-2            (read by the S-neighbour for NE)
+      4. x = a-1 column, y = 0..a-1         (read by the W-neighbour)
+    """
+    order: list[tuple[int, int]] = []
+    order += [(x, 0) for x in range(a - 1)]
+    core = sorted(
+        ((x + y, x, y) for x in range(a - 1) for y in range(1, a - 1))
+    )
+    order += [(x, y) for (_, x, y) in core]
+    order += [(x, a - 1) for x in range(a - 1)]
+    order += [(a - 1, y) for y in range(a)]
+    rank = np.zeros((a, a), dtype=np.int64)
+    for r, (x, y) in enumerate(order):
+        rank[x, y] = r
+    return rank
+
+
+def l_zigzag_ne(x, y, z, a: int = 4):
+    return _l_zigzag_ne_table(a)[x, y, z]
+
+
+def _l_zigzag_ne_table(a: int = 4) -> np.ndarray:
+    """offset[x, y, z] for the zigzagNE layout."""
+    rank = _zigzag_rank(a)
+    half = a // 2  # z-pairs
+    off = np.zeros((a, a, a), dtype=np.int64)
+    for x in range(a):
+        for y in range(a):
+            for z in range(a):
+                # two consecutive offsets share (x, y); z parity picks which.
+                # upper z half goes to the second a^3/2 block.
+                off[x, y, z] = (z // half) * (a * a * half) + 2 * rank[x, y] + (z % half)
+    return off
+
+
+@lru_cache(maxsize=None)
+def layout_permutation(layout: str, a: int = 4) -> np.ndarray:
+    """perm such that block[perm[i]] = value of node with canonical offset i.
+
+    Canonical node order is XYZ (offset = x + a*y + a^2*z).  Returns an
+    (a^3,) int32 array mapping canonical node index -> layout offset.
+    """
+    n = np.arange(a ** 3)
+    x, y, z = n % a, (n // a) % a, n // (a * a)
+    if layout == XYZ:
+        off = l_xyz(x, y, z, a)
+    elif layout == YXZ:
+        off = l_yxz(x, y, z, a)
+    elif layout == ZIGZAG_NE:
+        off = _l_zigzag_ne_table(a)[x, y, z]
+    else:
+        raise ValueError(f"unknown layout {layout!r}")
+    off = np.asarray(off, dtype=np.int32)
+    assert sorted(off.tolist()) == list(range(a ** 3)), f"{layout} not a bijection"
+    return off
+
+
+@lru_cache(maxsize=None)
+def inverse_permutation(layout: str, a: int = 4) -> np.ndarray:
+    """inv such that canonical_index = inv[layout_offset]."""
+    perm = layout_permutation(layout, a)
+    inv = np.empty_like(perm)
+    inv[perm] = np.arange(len(perm), dtype=np.int32)
+    return inv
+
+
+def direction_layouts(lattice: Lattice, scheme: str = "paper") -> list[str]:
+    """Layout name per direction index.
+
+    scheme: 'paper' (XYZ+YXZ+zigzagNE), 'xyz' (all XYZ), 'xyz+yxz',
+    'xyz+zigzag' — matching the four rows of the paper's Table 5.
+    """
+    if lattice.q != 19 and scheme != "xyz":
+        scheme = "xyz"  # paper assignment is D3Q19-specific
+    if scheme == "xyz":
+        return [XYZ] * lattice.q
+    full = [PAPER_ASSIGNMENT[name] for name in lattice.names]
+    if scheme == "paper":
+        return full
+    if scheme == "xyz+yxz":
+        return [l if l == YXZ else XYZ for l in full]
+    if scheme == "xyz+zigzag":
+        return [l if l == ZIGZAG_NE else XYZ for l in full]
+    raise ValueError(f"unknown layout scheme {scheme!r}")
+
+
+# --------------------------------------------------------------------------
+# Transaction model (paper §3.2, Table 5): count 32-byte transactions needed
+# to pull one f_i data block during propagation, given the layout.
+# --------------------------------------------------------------------------
+def transactions_for_direction(
+    e_i: tuple[int, int, int],
+    layout: str,
+    a: int = 4,
+    value_bytes: int = 8,
+    transaction_bytes: int = 32,
+) -> int:
+    """Number of 32-byte transactions to gather f_i for one full tile.
+
+    Pull streaming: node (x,y,z) of the current tile reads f_i from node
+    (x,y,z) - e_i, which lives either in this tile's data block or in a
+    neighbour tile's block (at wrapped coordinates).  Every distinct
+    transaction-aligned segment touched in any source block counts once —
+    exactly the paper's coalescing model.
+    """
+    per_tx = transaction_bytes // value_bytes
+    n = np.arange(a ** 3)
+    xs, ys, zs = n % a, (n // a) % a, n // (a * a)
+    offsets = layout_permutation(layout, a)
+
+    touched: dict[tuple[int, int, int], set[int]] = {}
+    ex, ey, ez = e_i
+    for x, y, z, _ in zip(xs, ys, zs, offsets):
+        sx, sy, sz = x - ex, y - ey, z - ez
+        tile = (sx // a, sy // a, sz // a)  # which neighbour block
+        lx, ly, lz = sx % a, sy % a, sz % a
+        src_off = int(offsets[lx + a * ly + a * a * lz])
+        touched.setdefault(tile, set()).add(src_off // per_tx)
+    return sum(len(s) for s in touched.values())
+
+
+def transactions_per_tile(
+    lattice: Lattice,
+    scheme: str = "paper",
+    a: int = 4,
+    value_bytes: int = 8,
+    transaction_bytes: int = 32,
+) -> dict[str, int]:
+    """Transactions per direction for a full interior tile (paper §3.2)."""
+    layouts = direction_layouts(lattice, scheme)
+    return {
+        name: transactions_for_direction(
+            tuple(lattice.e[i]), layouts[i], a, value_bytes, transaction_bytes
+        )
+        for i, name in enumerate(lattice.names)
+    }

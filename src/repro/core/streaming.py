@@ -1,0 +1,106 @@
+"""Streaming (propagation) index builder for the sparse tiled engine.
+
+Pull scheme (paper §2.3, [3, 26]): for every (tile, node, direction) we
+precompute — once, on the host, like the paper's CPU-side tiler — the flat
+index of the source value, folding in:
+
+* the per-direction data-block layout (L_XYZ / L_YXZ / L_zigzagNE),
+* cross-tile links through the tile map,
+* half-way bounce-back at solid nodes (pull the opposite direction from
+  the node itself),
+* optional periodic axes (used by validation tests).
+
+At run time streaming is then ONE gather per direction from the flattened
+(Q * T * a^3) state — every f_i value is read exactly once and written
+exactly once per LBM iteration, the paper's Eqn (10) minimum.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .lattice import Lattice
+from .layouts import direction_layouts, inverse_permutation, layout_permutation
+from .tiling import SOLID, Tiling
+
+
+@dataclasses.dataclass
+class StreamTables:
+    """Precomputed streaming tables (numpy; the engine ships them to device)."""
+
+    gather_idx: np.ndarray     # (Q, T, n) int32 into flat (Q*T*n) storage
+    bounce_frac: float         # fraction of links that bounce (diagnostics)
+    perms: np.ndarray          # (Q, n) int32 canonical -> storage slot
+    inv_perms: np.ndarray      # (Q, n) int32 storage slot -> canonical
+    cross_tile_frac: float     # fraction of links read from another tile
+
+
+def build_stream_tables(
+    tiling: Tiling,
+    lat: Lattice,
+    layout_scheme: str = "xyz",
+    periodic: tuple[bool, bool, bool] = (False, False, False),
+) -> StreamTables:
+    a = tiling.a
+    n = a ** 3
+    t_cnt = tiling.num_tiles
+    m = t_cnt * n
+    nx, ny, nz = tiling.shape
+    dims = np.array([nx, ny, nz], dtype=np.int64)
+    # periodic wrap must use the ORIGINAL extent (padding is solid filler)
+    wrap_dims = np.array(tiling.orig_shape, dtype=np.int64)
+
+    layouts = direction_layouts(lat, layout_scheme)
+    perms = np.stack([layout_permutation(l, a) for l in layouts])       # (Q, n)
+    inv_perms = np.stack([inverse_permutation(l, a) for l in layouts])  # (Q, n)
+
+    coords = tiling.node_coords().astype(np.int64)      # (T, n, 3) canonical
+    types = tiling.node_types                           # (T, n)
+    tile_map = tiling.tile_map
+
+    # flat storage index of every node's own slot, per direction (for bounce)
+    self_tile = np.arange(t_cnt, dtype=np.int64)[:, None]               # (T, 1)
+    canon = np.arange(n, dtype=np.int64)[None, :]                       # (1, n)
+
+    gather = np.empty((lat.q, t_cnt, n), dtype=np.int64)
+    bounce_links = 0
+    cross_links = 0
+    fluid = types != SOLID
+
+    for q in range(lat.q):
+        e = lat.e[q].astype(np.int64)
+        src = coords - e                                                # (T, n, 3)
+        oob = np.zeros(src.shape[:2], dtype=bool)
+        for ax in range(3):
+            if periodic[ax]:
+                src[..., ax] %= wrap_dims[ax]
+            else:
+                oob |= (src[..., ax] < 0) | (src[..., ax] >= dims[ax])
+        src_cl = np.clip(src, 0, dims - 1)
+        st = src_cl // a                                                # tile coords
+        so = src_cl - st * a                                            # local coords
+        src_tile = tile_map[st[..., 0], st[..., 1], st[..., 2]].astype(np.int64)
+        src_off = so[..., 0] + a * so[..., 1] + a * a * so[..., 2]      # canonical
+        empty = src_tile < 0
+        src_tile_cl = np.maximum(src_tile, 0)
+        solid_src = types[src_tile_cl, src_off] == SOLID
+        bounce = oob | empty | solid_src
+
+        opp = int(lat.opp[q])
+        idx_pull = q * m + src_tile_cl * n + perms[q][src_off]
+        idx_self = opp * m + self_tile * n + perms[opp][canon]
+        gather[q] = np.where(bounce, idx_self, idx_pull)
+
+        if q > 0:
+            bounce_links += int((bounce & fluid).sum())
+            cross_links += int(((src_tile_cl != self_tile) & ~bounce & fluid).sum())
+
+    total_links = max(1, int(fluid.sum()) * (lat.q - 1))
+    return StreamTables(
+        gather_idx=gather.astype(np.int32),
+        bounce_frac=bounce_links / total_links,
+        perms=perms.astype(np.int32),
+        inv_perms=inv_perms.astype(np.int32),
+        cross_tile_frac=cross_links / total_links,
+    )

@@ -1,0 +1,176 @@
+"""Host-side geometry tiler — Algorithm 1 of the paper.
+
+The geometry (a dense uint8 node-type array) is covered by a uniform mesh of
+cubic tiles of ``a**3`` nodes starting at node (0,0,0); tiles containing only
+solid nodes are dropped.  Products (paper Fig. 2):
+
+* ``tile_coords``  — the ``nonEmptyTiles`` array: (T, 3) tile-grid coordinates
+  of every non-empty tile, ordered z-major (slab friendly for sharding).
+* ``tile_map``     — dense (TX, TY, TZ) int32 matrix: tile index or -1.
+* ``tile_neighbors`` — (T, 27) int32: for each of the 3^3 surrounding tile
+  offsets, the neighbour's tile index or -1 (the kernel's local tileMap copy,
+  paper Fig. 11, precomputed once on the host).
+* ``node_types``   — (T, a^3) uint8 node types in canonical XYZ order.
+
+Everything here runs once at geometry load (numpy, linear time), exactly like
+the paper's CPU-side tiler.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+# node types
+SOLID = 0
+FLUID = 1
+INLET = 2    # Zou-He velocity inlet
+OUTLET = 3   # constant-pressure outlet
+
+NEIGHBOR_OFFSETS = np.array(
+    [(dx, dy, dz) for dz in (-1, 0, 1) for dy in (-1, 0, 1) for dx in (-1, 0, 1)],
+    dtype=np.int32,
+)  # (27, 3); offset (0,0,0) is index 13
+
+
+def neighbor_offset_index(dx: int, dy: int, dz: int) -> int:
+    return (dx + 1) + 3 * (dy + 1) + 9 * (dz + 1)
+
+
+@dataclasses.dataclass
+class Tiling:
+    a: int                       # nodes per tile edge
+    shape: tuple[int, int, int]  # padded geometry shape (multiples of a)
+    orig_shape: tuple[int, int, int]
+    tile_grid: tuple[int, int, int]
+    tile_coords: np.ndarray      # (T, 3) int32, tile-grid coords (nonEmptyTiles)
+    tile_map: np.ndarray         # (TX, TY, TZ) int32
+    tile_neighbors: np.ndarray   # (T, 27) int32
+    node_types: np.ndarray       # (T, a^3) uint8, XYZ order within tile
+
+    # ---- statistics (paper §3.3) ------------------------------------
+    @property
+    def num_tiles(self) -> int:
+        return len(self.tile_coords)
+
+    @property
+    def nodes_per_tile(self) -> int:
+        return self.a ** 3
+
+    @property
+    def n_fluid_nodes(self) -> int:
+        """Non-solid nodes over the whole geometry (n_fn)."""
+        return int((self.node_types != SOLID).sum())
+
+    @property
+    def tile_utilisation(self) -> float:
+        """Average tile utilisation eta_t = n_fn / (t_n * n_tn)  (Eqn 14)."""
+        denom = self.num_tiles * self.nodes_per_tile
+        return self.n_fluid_nodes / denom if denom else 0.0
+
+    @property
+    def porosity(self) -> float:
+        """Non-solid nodes / bounding-box nodes (paper §4.6 definition)."""
+        return self.n_fluid_nodes / float(np.prod(self.orig_shape))
+
+    def overhead_generic(self) -> float:
+        """Delta_eta (Eqn 15): extra work ratio from solid nodes in tiles."""
+        eta = self.tile_utilisation
+        return (1.0 - eta) / eta if eta > 0 else float("inf")
+
+    def overhead_memory(self, q: int = 19, n_d: int = 8, n_t: int = 1) -> float:
+        """Delta^M_eta (Eqn 16) vs the q*n_d minimum of Eqn (9)."""
+        eta = self.tile_utilisation
+        if eta == 0:
+            return float("inf")
+        return (2.0 * q * n_d + n_t) / (eta * q * n_d) - 1.0
+
+    def node_coords(self) -> np.ndarray:
+        """Global (x, y, z) for every (tile, node) slot — (T, a^3, 3) int32."""
+        a = self.a
+        n = np.arange(a ** 3, dtype=np.int32)
+        # canonical XYZ order: offset = x + a*y + a^2*z
+        local = np.stack([n % a, (n // a) % a, n // (a * a)], axis=-1)
+        return self.tile_coords[:, None, :] * a + local[None, :, :]
+
+
+def tile_geometry(node_type: np.ndarray, a: int = 4) -> Tiling:
+    """Cover ``node_type`` (X, Y, Z) with a^3 tiles, dropping all-solid tiles.
+
+    The paper's Algorithm 1, vectorised.  Geometry is padded with SOLID up to
+    multiples of ``a``.
+    """
+    assert node_type.ndim == 3, "node_type must be (Nx, Ny, Nz)"
+    node_type = np.ascontiguousarray(node_type.astype(np.uint8))
+    orig_shape = node_type.shape
+    pad = [(0, (-s) % a) for s in orig_shape]
+    if any(p[1] for p in pad):
+        node_type = np.pad(node_type, pad, constant_values=SOLID)
+    nx, ny, nz = node_type.shape
+    tx, ty, tz = nx // a, ny // a, nz // a
+
+    # (tx, a, ty, a, tz, a) -> (tx, ty, tz, a^3) in XYZ node order (x fastest)
+    blocks = node_type.reshape(tx, a, ty, a, tz, a)
+    blocks = blocks.transpose(0, 2, 4, 5, 3, 1)  # (tx, ty, tz, z, y, x)
+    blocks = blocks.reshape(tx, ty, tz, a ** 3)  # offset = x + a*y + a^2*z
+
+    non_empty = (blocks != SOLID).any(axis=-1)  # (tx, ty, tz)
+
+    # z-major ordering of non-empty tiles (slabs along z stay contiguous)
+    coords = np.argwhere(non_empty.transpose(2, 1, 0))  # (T, [z, y, x])
+    coords = coords[:, ::-1].astype(np.int32)           # (T, [x, y, z])
+
+    tile_map = np.full((tx, ty, tz), -1, dtype=np.int32)
+    tile_map[coords[:, 0], coords[:, 1], coords[:, 2]] = np.arange(
+        len(coords), dtype=np.int32
+    )
+
+    # neighbour table: local tileMap copy, precomputed (paper Fig. 11)
+    shifted = coords[:, None, :] + NEIGHBOR_OFFSETS[None, :, :]  # (T, 27, 3)
+    in_grid = (
+        (shifted >= 0).all(axis=-1)
+        & (shifted[..., 0] < tx)
+        & (shifted[..., 1] < ty)
+        & (shifted[..., 2] < tz)
+    )
+    clamped = np.clip(shifted, 0, np.array([tx - 1, ty - 1, tz - 1]))
+    neigh = tile_map[clamped[..., 0], clamped[..., 1], clamped[..., 2]]
+    neigh = np.where(in_grid, neigh, -1).astype(np.int32)
+
+    types = blocks[coords[:, 0], coords[:, 1], coords[:, 2]]  # (T, a^3)
+
+    return Tiling(
+        a=a,
+        shape=(nx, ny, nz),
+        orig_shape=tuple(orig_shape),
+        tile_grid=(tx, ty, tz),
+        tile_coords=coords,
+        tile_map=tile_map,
+        tile_neighbors=neigh,
+        node_types=types.astype(np.uint8),
+    )
+
+
+def untile(tiling: Tiling, values: np.ndarray, fill=0.0) -> np.ndarray:
+    """Scatter per-(tile, node) values back onto the dense padded grid.
+
+    values: (..., T, a^3) -> (..., Nx, Ny, Nz)
+    """
+    a = tiling.a
+    nx, ny, nz = tiling.shape
+    lead = values.shape[:-2]
+    out = np.full(lead + (nx, ny, nz), fill, dtype=values.dtype)
+    coords = tiling.node_coords()  # (T, a^3, 3)
+    out[..., coords[..., 0], coords[..., 1], coords[..., 2]] = values
+    return out
+
+
+def tile_field(tiling: Tiling, dense: np.ndarray) -> np.ndarray:
+    """Gather a dense (..., Nx, Ny, Nz) field into (..., T, a^3) tile slots."""
+    pad_width = [(0, 0)] * (dense.ndim - 3) + [
+        (0, tiling.shape[i] - dense.shape[dense.ndim - 3 + i]) for i in range(3)
+    ]
+    if any(p[1] for p in pad_width):
+        dense = np.pad(dense, pad_width)
+    coords = tiling.node_coords()
+    return dense[..., coords[..., 0], coords[..., 1], coords[..., 2]]

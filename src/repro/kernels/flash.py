@@ -1,0 +1,105 @@
+"""Pallas TPU flash-attention forward kernel.
+
+The pure-JAX blockwise path (models/attention.py) is the lowering used by
+the dry-run; THIS kernel is the TPU execution path for the logits-panel
+traffic identified in EXPERIMENTS.md §Roofline: the (BQ, BK) panels live in
+VMEM only — HBM sees q/k/v/out exactly once.
+
+Grid: (batch * kv_heads * q_per_kv, S/BQ).  Each instance owns one q block
+of one head; K/V for that head are resident in VMEM (BlockSpec maps the
+full T — at BK=512-aligned T up to ~8k this fits comfortably; longer T
+tiles over an extra grid dim in the production variant).  The inner loop
+walks K/V in BK slabs with the online-softmax recurrence; causal masking
+is derived from block indices (never materialised in HBM).
+
+Validated in interpret mode against models/attention._attend_dense over
+shape/softcap sweeps (tests/test_kernels_flash.py); compiled path is
+identical code on TPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, scale, softcap, bq, bk,
+                  causal):
+    qi = pl.program_id(1)
+    q = q_ref[0].astype(jnp.float32) * scale            # (BQ, hd)
+    t = k_ref.shape[1]
+    nb = t // bk
+
+    def body(j, carry):
+        acc, m_run, l_run = carry
+        k = k_ref[0, pl.dslice(j * bk, bk)].astype(jnp.float32)   # (BK, hd)
+        v = v_ref[0, pl.dslice(j * bk, bk)].astype(jnp.float32)
+        logits = q @ k.T                                  # (BQ, BK)
+        if softcap is not None:
+            logits = softcap * jnp.tanh(logits / softcap)
+        if causal:
+            q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            k_pos = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            logits = jnp.where(k_pos <= q_pos, logits, NEG_INF)
+        m_new = jnp.maximum(m_run, jnp.max(logits, axis=-1))
+        alpha = jnp.exp(m_run - m_new)
+        p = jnp.exp(logits - m_new[:, None])
+        l_new = l_run * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[:, None] + p @ v
+        return acc, m_new, l_new
+
+    acc0 = jnp.zeros((bq, q_ref.shape[-1]), jnp.float32)
+    m0 = jnp.full((bq,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((bq,), jnp.float32)
+    if causal:
+        # only blocks with k_start <= q_end participate
+        nb_needed = (qi + 1) * bq + bk - 1
+        upper = jnp.minimum(nb, jax.lax.div(nb_needed, bk))
+    else:
+        upper = nb
+    acc, m, l = jax.lax.fori_loop(0, upper, body, (acc0, m0, l0))
+    l = jnp.where(l == 0.0, 1.0, l)
+    o_ref[0] = (acc / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, scale=None, softcap=None, causal=True,
+                    bq: int = 256, bk: int = 256, interpret: bool = True):
+    """q: (B, S, H, hd); k/v: (B, T, KVH, hd) with H = KVH * G.
+
+    Returns (B, S, H, hd).  Forward only (the training path pairs this with
+    the custom_vjp backward in models/attention.py)."""
+    b, s, h, hd = q.shape
+    t, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    if scale is None:
+        scale = 1.0 / np.sqrt(hd)
+    bq = min(bq, s)
+    bk = min(bk, t)
+    assert s % bq == 0 and t % bk == 0, (s, bq, t, bk)
+
+    # fold heads into the grid: q -> (B*KVH*G, S, hd); k/v repeat over G
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, s, hd)
+    kf = jnp.repeat(k.transpose(0, 2, 1, 3), g, axis=1).reshape(b * h, t, hd)
+    vf = jnp.repeat(v.transpose(0, 2, 1, 3), g, axis=1).reshape(b * h, t, hd)
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, softcap=softcap, bq=bq, bk=bk,
+        causal=causal)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * h, s // bq),
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, t, hd), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, t, hd), lambda i, j: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, s, hd), q.dtype),
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(b, h, s, hd).transpose(0, 2, 1, 3)

@@ -1,0 +1,51 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+``collide_tiles`` accepts the engine's canonical (Q, T, n) layout, packs it
+into the kernel's tile-pair (Q, G, 128) layout (padding with solid slots),
+runs the kernel, and unpacks.  On this CPU container kernels run in
+``interpret=True`` mode; on TPU set ``interpret=False`` (same code path).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import collision as col
+from repro.core.lattice import Lattice
+
+from .collide import LANES, collide_pallas
+
+
+def _pack(f: jnp.ndarray, solid: jnp.ndarray, block_rows: int):
+    """(Q, T, n) -> (Q, G, 128) with G a multiple of block_rows."""
+    q = f.shape[0]
+    m = f.shape[1] * f.shape[2]
+    row_nodes = LANES * block_rows
+    m_pad = -(-m // row_nodes) * row_nodes
+    f_flat = f.reshape(q, m)
+    s_flat = solid.reshape(m).astype(jnp.uint8)
+    if m_pad != m:
+        f_flat = jnp.pad(f_flat, ((0, 0), (0, m_pad - m)))
+        s_flat = jnp.pad(s_flat, (0, m_pad - m), constant_values=1)
+    return f_flat.reshape(q, m_pad // LANES, LANES), s_flat.reshape(-1, LANES), m
+
+
+@partial(
+    jax.jit,
+    static_argnames=("lat", "cfg", "force", "block_rows", "interpret"),
+)
+def collide_tiles(
+    f: jnp.ndarray,            # (Q, T, n) canonical post-streaming state
+    solid: jnp.ndarray,        # (T, n) bool
+    lat: Lattice,
+    cfg: col.CollisionConfig,
+    force=None,
+    block_rows: int = 8,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    q, t, n = f.shape
+    fp, sp, m = _pack(f, solid, block_rows)
+    out = collide_pallas(fp, sp, lat, cfg, force, block_rows, interpret)
+    return out.reshape(q, -1)[:, :m].reshape(q, t, n)

@@ -1,0 +1,43 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Shapes follow the kernels' packed layout: f is (Q, G, 128) where G*128 node
+slots hold tile-pair-packed data (2 tiles x 64 nodes per 128-lane row).
+The oracles are deliberately written with the straight-line formulas from
+the paper (Eqns 3-6, 8) and shared collision code, independent of any
+kernel-side tricks.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import collision as col
+from repro.core.lattice import Lattice
+
+
+def collide_ref(
+    f: jnp.ndarray,            # (Q, G, L)
+    solid: jnp.ndarray,        # (G, L) bool — True for solid/padding slots
+    lat: Lattice,
+    cfg: col.CollisionConfig,
+    force=None,
+) -> jnp.ndarray:
+    # guard the quasi-compressible division: solid slots hold rho = 0
+    if cfg.fluid == col.QUASI_COMPRESSIBLE:
+        f = jnp.where(solid[None], jnp.asarray(lat.w, f.dtype)[:, None, None], f)
+    f_out, _, _ = col.collide(f, lat, cfg, force)
+    return jnp.where(solid[None], 0.0, f_out)
+
+
+def stream_collide_ref(
+    f: jnp.ndarray,            # (Q, G, L) pre-streaming state (storage order)
+    gather_idx: jnp.ndarray,   # (Q, G, L) int32 into flat (Q*G*L)
+    solid: jnp.ndarray,        # (G, L) bool
+    lat: Lattice,
+    cfg: col.CollisionConfig,
+    force=None,
+) -> jnp.ndarray:
+    """Oracle for the fused streaming+collision path: gather then collide."""
+    q, g, l = f.shape
+    f_in = jnp.take(f.reshape(-1), gather_idx.reshape(q, -1), axis=0)
+    f_in = f_in.reshape(q, g, l)
+    return collide_ref(f_in, solid, lat, cfg, force)

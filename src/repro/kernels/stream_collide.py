@@ -1,0 +1,186 @@
+"""Pallas TPU kernel: the paper's FUSED LBM step (Algorithm 2) per tile.
+
+One kernel instance = one tile (grid over non-empty tiles).  The paper's
+shared-memory copy of the local tileMap (Fig. 11) becomes SCALAR-PREFETCHED
+neighbour indices: the per-offset BlockSpec index_maps read the neighbour
+tile id from the prefetched (T, 27) table, so every pull source streams
+HBM→VMEM as a whole data block — the TPU analogue of the paper's "minimal
+fully-utilised transactions" (DESIGN.md §2).
+
+Data layout: f is (T+1, Q, n) — one contiguous (Q, 64) data block per tile,
+with a SCRATCH tile (all-solid, zero f) at index T; out-of-grid/empty
+neighbours point at it, so half-way bounce-back falls out of the ordinary
+"source is solid" test with no branches (the paper's Algorithm 2 lines
+9-11).
+
+Pull geometry: node x pulls f_q from x - e_q, which lies in this tile or in
+one of the D3Q19 linkage neighbours — for DIAGONAL directions an edge/corner
+node's source may sit in a FACE neighbour rather than the diagonal one, so
+the kernel loads all 18 linked neighbour blocks (6 faces + 12 edges) once
+and a static per-(direction, node) CASE table picks the source block.  All
+tables are host-built numpy constants shipped as kernel inputs, exactly
+like the paper builds its indices once on CPU.
+
+Collision reuses the tile-pair collide math (kernels/collide.py) — LBGK is
+pure VPU; LBMRT contracts the 19x19 collision matrix on the MXU.
+Validated in interpret mode against SparseTiledLBM in
+tests/test_kernels_fused.py; identical code compiles for TPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import collision as col
+from repro.core.lattice import Lattice
+from repro.core.tiling import SOLID, Tiling, neighbor_offset_index
+
+from .collide import _collide_block
+
+
+def _pull_geometry(lat: Lattice, a: int = 4):
+    """Static pull tables.
+
+    Returns (offsets, perms (Q, n) int32, cases (Q, n) int8) where
+    offsets is the ordered list of distinct neighbour tile offsets the
+    lattice links to, and cases[q, node] = 0 for an in-tile source or
+    1 + offsets.index(node's source-tile offset)."""
+    n = a ** 3
+    idx = np.arange(n)
+    x, y, z = idx % a, (idx // a) % a, idx // (a * a)
+    offsets: list[tuple[int, int, int]] = []
+    perms = np.zeros((lat.q, n), np.int32)
+    cases = np.zeros((lat.q, n), np.int8)
+    for q in range(lat.q):
+        e = lat.e[q]
+        sx, sy, sz = x - e[0], y - e[1], z - e[2]
+        perms[q] = (sx % a) + a * (sy % a) + a * a * (sz % a)
+        dx, dy, dz = sx // a, sy // a, sz // a       # each in {-1, 0}
+        for node in range(n):
+            off = (int(dx[node]), int(dy[node]), int(dz[node]))
+            if off == (0, 0, 0):
+                continue
+            if off not in offsets:
+                offsets.append(off)
+            cases[q, node] = 1 + offsets.index(off)
+    return offsets, perms, cases
+
+
+def make_kernel(lat: Lattice, cfg: col.CollisionConfig, n_offsets: int,
+                force=None):
+    opp = lat.opp
+    mrt = cfg.model == col.LBMRT
+
+    def kernel(nb_ref, own_f, own_t, perms_ref, cases_ref, *rest):
+        out_ref = rest[-1]
+        if mrt:
+            a_ref = rest[-2]
+            nbr = rest[:-2]
+        else:
+            a_ref = None
+            nbr = rest[:-1]                   # (f_off, t_off) x n_offsets
+        f_own = own_f[0].astype(jnp.float32)  # (Q, n)
+        t_own = own_t[0]                      # (n,)
+
+        pulled = [f_own[0]]
+        for q in range(1, lat.q):
+            perm = perms_ref[q]
+            case = cases_ref[q]
+            src_f = jnp.take(f_own[q], perm)
+            src_t = jnp.take(t_own, perm)
+            for c in range(n_offsets):
+                f_nb = nbr[2 * c][0].astype(jnp.float32)
+                t_nb = nbr[2 * c + 1][0]
+                hit = case == (c + 1)
+                src_f = jnp.where(hit, jnp.take(f_nb[q], perm), src_f)
+                src_t = jnp.where(hit, jnp.take(t_nb, perm), src_t)
+            bounce = src_t == SOLID
+            pulled.append(jnp.where(bounce, f_own[int(opp[q])], src_f))
+        f_in = jnp.stack(pulled)              # (Q, n)
+
+        solid_here = t_own == SOLID
+        a_mat = a_ref[...] if mrt else None
+        f_out = _collide_block(f_in[:, None, :], solid_here[None, :],
+                               a_mat, lat, cfg, force)[:, 0, :]
+        out_ref[0] = f_out.astype(out_ref.dtype)
+
+    return kernel
+
+
+def stream_collide_tiles(f, node_types, neighbors, lat: Lattice,
+                         cfg: col.CollisionConfig, a: int = 4, force=None,
+                         interpret: bool = True):
+    """One fused LBM step over all tiles.
+
+    f:          (T+1, Q, n) — scratch tile at index T must be zero
+    node_types: (T+1, n) uint8 — scratch tile must be SOLID
+    neighbors:  (T, 27) int32 — empty/out-of-grid entries = T (scratch)
+    Returns the post-collision (T+1, Q, n) (scratch row zeroed).
+    """
+    t1, q, n = f.shape
+    t = t1 - 1
+    offsets, perms_np, cases_np = _pull_geometry(lat, a)
+    kernel = make_kernel(lat, cfg, len(offsets), force)
+
+    perms = jnp.asarray(perms_np)
+    cases = jnp.asarray(cases_np)
+    table_spec = pl.BlockSpec((q, n), lambda i, nb: (0, 0))
+    in_specs = [
+        pl.BlockSpec((1, q, n), lambda i, nb: (i, 0, 0)),   # own f
+        pl.BlockSpec((1, n), lambda i, nb: (i, 0)),          # own types
+        table_spec, table_spec,                              # perms, cases
+    ]
+    operands = [f, node_types, perms, cases]
+    for off in offsets:
+        k = neighbor_offset_index(*off)
+
+        def f_map(i, nb, _k=k):
+            return (nb[i, _k], 0, 0)
+
+        def t_map(i, nb, _k=k):
+            return (nb[i, _k], 0)
+
+        in_specs.append(pl.BlockSpec((1, q, n), f_map))
+        in_specs.append(pl.BlockSpec((1, n), t_map))
+        operands.extend([f, node_types])
+
+    if cfg.model == col.LBMRT:
+        in_specs.append(pl.BlockSpec((q, q), lambda i, nb: (0, 0)))
+        operands.append(jnp.asarray(col.collision_matrix_np(lat, cfg.tau),
+                                    jnp.float32))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(t,),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, q, n), lambda i, nb: (i, 0, 0)),
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((t1, q, n), f.dtype),
+        interpret=interpret,
+    )(neighbors, *operands)
+    return out.at[t].set(0.0)
+
+
+def pack_engine_state(tiling: Tiling, f_canon, lat: Lattice):
+    """(Q, T, n) canonical engine state -> kernel inputs."""
+    t, n = tiling.num_tiles, tiling.nodes_per_tile
+    f = jnp.zeros((t + 1, lat.q, n), f_canon.dtype)
+    f = f.at[:t].set(jnp.moveaxis(f_canon, 0, 1))
+    types = jnp.full((t + 1, n), SOLID, jnp.uint8)
+    types = types.at[:t].set(jnp.asarray(tiling.node_types))
+    nbrs = jnp.asarray(
+        np.where(tiling.tile_neighbors < 0, t, tiling.tile_neighbors)
+        .astype(np.int32))
+    return f, types, nbrs
+
+
+def unpack_engine_state(f_packed):
+    return jnp.moveaxis(f_packed[:-1], 0, 1)       # -> (Q, T, n)

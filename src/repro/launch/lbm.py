@@ -1,0 +1,177 @@
+import os
+import sys
+if "--dryrun" in sys.argv:  # BEFORE any jax import (device count locks)
+    os.environ.setdefault("XLA_FLAGS",
+                          "--xla_force_host_platform_device_count=512")
+"""LBM launcher: run the paper's solver, or dry-run it on the production
+meshes (the paper's own technique under the same multi-pod regime as the
+assigned LM architectures).
+
+    # small real run on local devices
+    PYTHONPATH=src python -m repro.launch.lbm --case duct --steps 100
+
+    # multi-pod dry-run: slab decomposition over pod x data (32 slabs),
+    # 16x16 and 2x16x16 meshes
+    PYTHONPATH=src python -m repro.launch.lbm --dryrun --mesh both
+"""
+import argparse
+import json
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import collision as C
+from repro.core.boundary import BoundarySpec
+from repro.core.engine import LBMConfig, SparseTiledLBM
+from repro.core.tiling import INLET, OUTLET
+from repro.data import geometry as geo
+from repro.dist.lbm import ShardedLBM
+from repro.launch.mesh import make_production_mesh, mesh_chip_count
+from repro.roofline.analysis import HBM_BW, ICI_BW, PEAK_FLOPS
+from repro.roofline.hlo_cost import analyze_hlo
+
+
+def make_case(name: str, scale: int = 1):
+    if name == "cavity":
+        g = geo.cavity3d(48 * scale)
+        bcs = ((geo.LID, BoundarySpec("velocity", (0, 0, -1),
+                                      velocity=(0.05, 0.0, 0.0))),)
+        return g, bcs, (False, False, False)
+    if name == "duct":
+        g = geo.duct(24 * scale, 24 * scale, 96 * scale)
+        bcs = ((INLET, BoundarySpec("velocity", (0, 0, 1),
+                                    velocity=(0, 0, 0.05))),
+               (OUTLET, BoundarySpec("pressure", (0, 0, -1), rho=1.0)))
+        return g, bcs, (False, False, False)
+    if name == "spheres":
+        g = geo.random_spheres(box=64 * scale, porosity=0.7, diameter=16)
+        g = geo.duct_wrap(g) if hasattr(geo, "duct_wrap") else g
+        return g, (), (True, True, True)
+    raise ValueError(name)
+
+
+def dryrun(multi_pod: bool, collision: str = "lbgk",
+           fluid: str = "incompressible", verbose: bool = True) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh_chip_count(mesh)
+    axis = ("pod", "data") if multi_pod else ("data",)
+    slabs = 2 * 16 if multi_pod else 16        # slab axis = pod x data
+    # production-scale geometry: a long duct with >= `slabs` z tile-layers;
+    # the "model" axis is left for a second-level decomposition (future
+    # work: 2-D slab grid); slab count 16/32 matches pod x data.
+    g, bcs, periodic = make_case("duct", scale=1)
+    # deepen z so every slab holds >= 2 tile layers
+    reps = max(1, (slabs * 2 * 4) // g.shape[2] + 1)
+    g = np.concatenate([g] * reps, axis=2)
+    cfg = LBMConfig(
+        collision=C.CollisionConfig(model=collision, fluid=fluid, tau=0.6),
+        layout_scheme="paper", dtype="float32", boundaries=bcs,
+        periodic=periodic)
+    eng = ShardedLBM(g, cfg, mesh, axis=axis, dryrun=True)
+    t0 = time.time()
+    lowered = eng.lower_step()
+    compiled = lowered.compile()
+    dt = time.time() - t0
+    mem = compiled.memory_analysis()
+    hc = analyze_hlo(compiled.as_text())
+    n_own = eng.plan.n_fluid_own
+    q = eng.lat.q
+    nd = jnp.dtype(cfg.dtype).itemsize
+    # paper Eqn (10): minimum bytes per node per step = 2 q n_d
+    min_bytes_global = 2 * q * nd * n_own
+    terms = {
+        "t_compute": hc.flops / PEAK_FLOPS,
+        "t_memory": hc.bytes / HBM_BW,
+        "t_collective": hc.collective_bytes / ICI_BW,
+    }
+    dominant = max(terms, key=terms.get)
+    out = {
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": chips, "slabs": eng.plan.n_dev,
+        "geometry": list(g.shape),
+        "fluid_nodes": n_own,
+        "tile_utilisation": None,
+        "flops_per_device": hc.flops,
+        "bytes_per_device": hc.bytes,
+        "coll_bytes_per_device": hc.collective_bytes,
+        "coll_by_op": hc.coll_by_op,
+        "min_bytes_per_device": min_bytes_global / eng.plan.n_dev,
+        "bw_efficiency_model": (min_bytes_global / eng.plan.n_dev)
+        / max(hc.bytes, 1.0),
+        **terms,
+        "dominant": dominant,
+        "compile_s": round(dt, 1),
+        "ok": True,
+    }
+    if verbose:
+        print(f"[LBM x {out['mesh']}] OK slabs={out['slabs']} "
+              f"geom={out['geometry']} fluid={n_own:,}")
+        print(f"  memory_analysis: {mem}")
+        print(f"  terms: compute={terms['t_compute']*1e6:.1f}us "
+              f"memory={terms['t_memory']*1e6:.1f}us "
+              f"collective={terms['t_collective']*1e6:.1f}us "
+              f"-> dominant={dominant}; "
+              f"Eqn10-min/HLO-bytes={out['bw_efficiency_model']:.3f}")
+    return out
+
+
+def run_local(args):
+    g, bcs, periodic = make_case(args.case, args.scale)
+    cfg = LBMConfig(
+        collision=C.CollisionConfig(model=args.collision, fluid=args.fluid,
+                                    tau=args.tau),
+        layout_scheme="paper", dtype=args.dtype, boundaries=bcs,
+        periodic=periodic)
+    n_dev = len(jax.devices())
+    if n_dev > 1:
+        mesh = jax.make_mesh((n_dev,), ("data",))
+        eng = ShardedLBM(g, cfg, mesh)
+        n_fluid = eng.plan.n_fluid_own
+    else:
+        eng = SparseTiledLBM(g, cfg)
+        n_fluid = eng.n_fluid_nodes
+    eng.step(1)  # compile
+    t0 = time.time()
+    eng.step(args.steps)
+    jax.block_until_ready(eng.f)
+    dt = time.time() - t0
+    mflups = n_fluid * args.steps / dt / 1e6
+    print(f"case={args.case} devices={n_dev} fluid={n_fluid:,} "
+          f"steps={args.steps} {dt:.2f}s -> {mflups:.2f} MFLUPS")
+    print(f"mass = {eng.total_mass():.6f}")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dryrun", action="store_true")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="both")
+    ap.add_argument("--case", default="duct",
+                    choices=["cavity", "duct", "spheres"])
+    ap.add_argument("--scale", type=int, default=1)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--tau", type=float, default=0.6)
+    ap.add_argument("--collision", default="lbgk", choices=["lbgk", "lbmrt"])
+    ap.add_argument("--fluid", default="incompressible",
+                    choices=["incompressible", "quasi_compressible"])
+    ap.add_argument("--dtype", default="float32")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+
+    if not args.dryrun:
+        return run_local(args)
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    results = [dryrun(mp, args.collision, args.fluid) for mp in meshes]
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,10 @@
+"""LM model substrate for the assigned architectures.
+
+Pure-function JAX models: params are plain dict pytrees, every forward is an
+explicit function of (params, inputs).  ``model.py`` exposes the unified
+CausalLM API used by the trainer, server and dry-run.
+"""
+from .config import ModelConfig, MoEConfig, SSMConfig
+from .model import CausalLM
+
+__all__ = ["CausalLM", "ModelConfig", "MoEConfig", "SSMConfig"]

@@ -1,0 +1,456 @@
+"""Grouped-query attention with RoPE, softcap, local windows and KV cache.
+
+Covers every attention variant in the assigned pool:
+  * GQA with arbitrary kv-head count (starcoder2 kv=2 ... qwen kv=40=MHA)
+  * QKV bias (qwen1.5)
+  * partial rotary ("2d" RoPE, chatglm3: fraction 0.5)
+  * attention logit soft-capping + local/global alternation (gemma2)
+  * prefix-LM masks (paligemma: bidirectional over the image prefix)
+  * decode path against a pre-allocated KV cache (serve_step)
+
+Two execution paths:
+  * ``_attend_dense``    — materialises the (S, T) logits; used for short
+    sequences and single-token decode.
+  * ``_attend_blockwise``— online-softmax scan over KV blocks (flash-style,
+    pure JAX): peak memory is one (S, BLOCK) logits panel, which is what
+    makes the 32k-prefill and 4k-train shapes fit HBM.  The Pallas flash
+    kernel (kernels/flash.py) is the TPU perf path validated against this.
+
+Masks are never materialised as (B, 1, S, T) tensors; they are computed
+per block from positions + the static window/prefix fields of AttnConfig.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import apply_rope, param_init, shard
+
+NEG_INF = -1e30
+BLOCKWISE_THRESHOLD = 2048   # use the blockwise path for T > this
+KV_BLOCK = 512
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnConfig:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    qkv_bias: bool = False
+    rope_fraction: float = 1.0
+    rope_theta: float = 10000.0
+    softcap: float | None = None
+    window: int | None = None         # None = global causal
+    prefix_len: int = 0               # bidirectional prefix (paligemma)
+    query_scale: float | None = None  # None = 1/sqrt(head_dim)
+
+    @property
+    def scale(self) -> float:
+        return self.query_scale if self.query_scale is not None else 1.0 / float(np.sqrt(self.head_dim))
+
+
+def init_attn(key, cfg: AttnConfig, dtype=jnp.float32):
+    d, h, kvh, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": param_init(ks[0], (d, h * hd), dtype=dtype),
+        "wk": param_init(ks[1], (d, kvh * hd), dtype=dtype),
+        "wv": param_init(ks[2], (d, kvh * hd), dtype=dtype),
+        "wo": param_init(ks[3], (h * hd, d), scale=0.02 / np.sqrt(2), dtype=dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * hd,), dtype)
+        p["bk"] = jnp.zeros((kvh * hd,), dtype)
+        p["bv"] = jnp.zeros((kvh * hd,), dtype)
+    return p
+
+
+def _project_qkv(p, x, cfg: AttnConfig, positions):
+    b, s, _ = x.shape
+    h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    dt = x.dtype
+    q = x @ p["wq"].astype(dt)
+    k = x @ p["wk"].astype(dt)
+    v = x @ p["wv"].astype(dt)
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(dt)
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    q = shard(q.reshape(b, s, h, hd), "batch", None, "heads", None)
+    k = shard(k.reshape(b, s, kvh, hd), "batch", None, "kv_heads", None)
+    v = shard(v.reshape(b, s, kvh, hd), "batch", None, "kv_heads", None)
+    q = apply_rope(q, positions, cfg.rope_fraction, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_fraction, cfg.rope_theta)
+    return q, k, v
+
+
+# --------------------------------------------------------------------------
+# mask predicate (never materialised globally)
+# --------------------------------------------------------------------------
+def _mask_block(q_pos, k_pos, cfg: AttnConfig):
+    """(S,) x (T,) int32 -> (S, T) bool visibility."""
+    m = k_pos[None, :] <= q_pos[:, None]
+    if cfg.window is not None:
+        m &= k_pos[None, :] > q_pos[:, None] - cfg.window
+    if cfg.prefix_len:
+        m |= (k_pos[None, :] < cfg.prefix_len) & (q_pos[:, None] < cfg.prefix_len)
+    return m
+
+
+# --------------------------------------------------------------------------
+# dense path (short sequences, decode)
+# --------------------------------------------------------------------------
+def _attend_dense(q, k, v, cfg: AttnConfig, q_pos, k_pos, valid=None):
+    """q: (B,S,H,hd)  k/v: (B,T,KVH,hd)  q_pos: (S,), k_pos: (T,)."""
+    b, s, h, hd = q.shape
+    kvh = k.shape[2]
+    group = h // kvh
+    qg = q.reshape(b, s, kvh, group, hd)
+    logits = jnp.einsum("bskgd,btkd->bkgst", qg * cfg.scale, k)
+    logits = logits.astype(jnp.float32)
+    if cfg.softcap is not None:
+        logits = cfg.softcap * jnp.tanh(logits / cfg.softcap)
+    mask = _mask_block(q_pos, k_pos, cfg)
+    if valid is not None:                       # decode: cache slots in use
+        mask &= valid[None, :]
+    logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v)
+    return out.reshape(b, s, h, hd)
+
+
+# --------------------------------------------------------------------------
+# blockwise path (flash-style online softmax over KV blocks)
+#
+# ``_attend_blockwise`` is the custom_vjp entry: forward is an online-softmax
+# scan over KV blocks; backward RECOMPUTES per-block logits from the saved
+# (out, m, l) row statistics (FlashAttention-2 equations) instead of letting
+# scan-AD stack per-block probabilities as residuals.  The scan-AD version
+# is kept as ``_attend_blockwise_ref`` — it is the grad oracle in tests and
+# the "before" datapoint in EXPERIMENTS.md §Perf (its stacked
+# (nb, B, KVH, G, S, BLOCK) residuals were 10+ GiB/device at train_4k).
+# --------------------------------------------------------------------------
+def _attend_blockwise_ref(q, k, v, cfg: AttnConfig, q_pos, k_pos, block: int = KV_BLOCK):
+    b, s, h, hd = q.shape
+    t0 = k.shape[1]
+    kvh = k.shape[2]
+    group = h // kvh
+    if t0 % block:
+        pad = block - t0 % block
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    t = k.shape[1]
+    nb = t // block
+    qg = (q.reshape(b, s, kvh, group, hd) * jnp.asarray(cfg.scale, q.dtype))
+
+    kb = k.reshape(b, nb, block, kvh, hd)
+    vb = v.reshape(b, nb, block, kvh, hd)
+    # NOTE: k positions are derived from a loop-CARRIED block counter, not
+    # from xs.  Both a precomputed (nb, block) position table and an
+    # arange(nb) xs are constant-foldable, which lets XLA hoist the
+    # broadcasted mask for ALL blocks out of the loop — a
+    # (nb, b, kvh, g, s, block) pred buffer (3.2 GiB at the 4k-train
+    # shape).  A carry-derived index cannot be hoisted.  Measured in
+    # EXPERIMENTS.md §Perf iteration 0.
+    base = jnp.arange(block, dtype=jnp.int32)
+
+    def body(carry, inp):
+        acc, m_run, l_run, i = carry
+        kblk, vblk = inp
+        kp = i * block + base
+        logits = jnp.einsum("bskgd,btkd->bkgst", qg, kblk).astype(jnp.float32)
+        if cfg.softcap is not None:
+            logits = cfg.softcap * jnp.tanh(logits / cfg.softcap)
+        mask = _mask_block(q_pos, kp, cfg) & (kp < t0)[None, :]
+        logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+        m_new = jnp.maximum(m_run, jnp.max(logits, axis=-1))
+        alpha = jnp.exp(m_run - m_new)
+        p_blk = jnp.exp(logits - m_new[..., None])
+        l_new = l_run * alpha + jnp.sum(p_blk, axis=-1)
+        upd = jnp.einsum("bkgst,btkd->bkgsd", p_blk.astype(q.dtype), vblk)
+        acc = acc * alpha[..., None].astype(q.dtype) + upd
+        return (acc, m_new, l_new, i + 1), None
+
+    acc0 = jnp.zeros((b, kvh, group, s, hd), q.dtype)
+    m0 = jnp.full((b, kvh, group, s), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, kvh, group, s), jnp.float32)
+    (acc, m_run, l_run, _), _ = jax.lax.scan(
+        body, (acc0, m0, l0, jnp.zeros((), jnp.int32)),
+        (jnp.moveaxis(kb, 1, 0), jnp.moveaxis(vb, 1, 0)),
+    )
+    l_safe = jnp.where(l_run == 0.0, 1.0, l_run)
+    out = acc / l_safe[..., None].astype(q.dtype)
+    out = jnp.moveaxis(out, 3, 1)               # (B, S, KVH, G, hd)
+    return out.reshape(b, s, h, hd)
+
+
+# --------------------------------------------------------------------------
+# flash custom_vjp: memory-linear forward AND backward
+# --------------------------------------------------------------------------
+def _flash_shardings(q, k, v):
+    """Context-parallel layout for the flash interior: Q (and with it every
+    (…, S, BLOCK) logits panel) shards its SEQUENCE over "model"; K/V remain
+    as projected.  Without the explicit constraint GSPMD falls back to
+    replicating the f32 backward panels when kv-heads are unshardable
+    (measured: 4 GiB x12 buffers at chatglm train_4k — EXPERIMENTS.md §Perf)."""
+    q = shard(q, "batch", "seq_act", None, None, None)
+    return q, k, v
+
+
+def _flash_scan_fwd(q, k, v, cfg: AttnConfig, q_pos, block: int, t0: int):
+    """Online-softmax forward.  q: (B,S,KVH,G,hd) pre-scaled; k/v padded to a
+    multiple of block; t0 = true (unpadded) KV length.  Returns
+    (out, m, l) with (m, l) the softmax row statistics."""
+    q, k, v = _flash_shardings(q, k, v)
+    b, s, kvh, group, hd = q.shape
+    t = k.shape[1]
+    nb = t // block
+    kb = k.reshape(b, nb, block, kvh, hd)
+    vb = v.reshape(b, nb, block, kvh, hd)
+    base = jnp.arange(block, dtype=jnp.int32)
+
+    def body(carry, inp):
+        acc, m_run, l_run, i = carry
+        kblk, vblk = inp
+        kp = i * block + base
+        logits = jnp.einsum("bskgd,btkd->bkgst", q, kblk).astype(jnp.float32)
+        if cfg.softcap is not None:
+            logits = cfg.softcap * jnp.tanh(logits / cfg.softcap)
+        mask = _mask_block(q_pos, kp, cfg) & (kp < t0)[None, :]
+        logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+        m_new = jnp.maximum(m_run, jnp.max(logits, axis=-1))
+        alpha = jnp.exp(m_run - m_new)
+        p_blk = jnp.exp(logits - m_new[..., None])
+        l_new = l_run * alpha + jnp.sum(p_blk, axis=-1)
+        upd = jnp.einsum("bkgst,btkd->bkgsd", p_blk.astype(q.dtype), vblk)
+        acc = acc * alpha[..., None].astype(q.dtype) + upd
+        return (acc, m_new, l_new, i + 1), None
+
+    acc0 = jnp.zeros((b, kvh, group, s, hd), q.dtype)
+    m0 = jnp.full((b, kvh, group, s), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, kvh, group, s), jnp.float32)
+    (acc, m, l, _), _ = jax.lax.scan(
+        body, (acc0, m0, l0, jnp.zeros((), jnp.int32)),
+        (jnp.moveaxis(kb, 1, 0), jnp.moveaxis(vb, 1, 0)))
+    l_safe = jnp.where(l == 0.0, 1.0, l)
+    out = acc / l_safe[..., None].astype(q.dtype)   # (B,KVH,G,S,hd)
+    out = shard(out, "batch", None, None, "seq_act", None)
+    return out, m, l_safe
+
+
+def _flash_key(cfg: AttnConfig, t0: int, block: int):
+    return (cfg.scale, cfg.softcap, cfg.window, cfg.prefix_len, t0, block)
+
+
+from functools import lru_cache
+
+
+@lru_cache(maxsize=None)
+def _make_flash(key):
+    scale, softcap, window, prefix_len, t0, block = key
+    cfg = AttnConfig(d_model=0, n_heads=1, n_kv_heads=1, head_dim=1,
+                     softcap=softcap, window=window, prefix_len=prefix_len,
+                     query_scale=scale)
+
+    @jax.custom_vjp
+    def flash(q, k, v, q_pos):
+        out, m, l = _flash_scan_fwd(q, k, v, cfg, q_pos, block, t0)
+        return out
+
+    def fwd(q, k, v, q_pos):
+        out, m, l = _flash_scan_fwd(q, k, v, cfg, q_pos, block, t0)
+        return out, (q, k, v, q_pos, out, m, l)
+
+    def bwd(res, dout):
+        q, k, v, q_pos, out, m, l = res
+        q, k, v = _flash_shardings(q, k, v)
+        dout = shard(dout, "batch", None, None, "seq_act", None)
+        out = shard(out, "batch", None, None, "seq_act", None)
+        m = shard(m, "batch", None, None, "seq_act")
+        l = shard(l, "batch", None, None, "seq_act")
+        b, s, kvh, group, hd = q.shape
+        t = k.shape[1]
+        nb = t // block
+        kb = jnp.moveaxis(k.reshape(b, nb, block, kvh, hd), 1, 0)
+        vb = jnp.moveaxis(v.reshape(b, nb, block, kvh, hd), 1, 0)
+        base = jnp.arange(block, dtype=jnp.int32)
+        # delta = rowsum(dout * out)  (B,KVH,G,S)
+        delta = jnp.sum(dout.astype(jnp.float32) * out.astype(jnp.float32),
+                        axis=-1)
+
+        def body(carry, inp):
+            dq_acc, i = carry
+            kblk, vblk = inp
+            kp = i * block + base
+            lg = jnp.einsum("bskgd,btkd->bkgst", q, kblk).astype(jnp.float32)
+            dcap = None
+            if softcap is not None:
+                th = jnp.tanh(lg / softcap)
+                lg = softcap * th
+                dcap = 1.0 - th * th                 # d(softcap)/dlogit
+            mask = _mask_block(q_pos, kp, cfg) & (kp < t0)[None, :]
+            lg = jnp.where(mask[None, None, None], lg, NEG_INF)
+            p = jnp.exp(lg - m[..., None]) / l[..., None]        # (B,K,G,S,T)
+            dp = jnp.einsum("bkgsd,btkd->bkgst",
+                            dout.astype(jnp.float32),
+                            vblk.astype(jnp.float32))
+            ds = p * (dp - delta[..., None])
+            if softcap is not None:
+                ds = ds * dcap
+            ds = ds.astype(q.dtype)
+            dv = jnp.einsum("bkgst,bkgsd->btkd", p.astype(q.dtype), dout)
+            dk = jnp.einsum("bkgst,bskgd->btkd", ds, q)
+            dq_acc = dq_acc + jnp.einsum("bkgst,btkd->bskgd", ds, kblk)
+            return (dq_acc, i + 1), (dk, dv)
+
+        dq0 = jnp.zeros_like(q)
+        (dq, _), (dks, dvs) = jax.lax.scan(
+            body, (dq0, jnp.zeros((), jnp.int32)), (kb, vb))
+        dk = jnp.moveaxis(dks, 0, 1).reshape(b, t, kvh, hd)
+        dv = jnp.moveaxis(dvs, 0, 1).reshape(b, t, kvh, hd)
+        dq_pos = jnp.zeros(q_pos.shape, jax.dtypes.float0)
+        return dq, dk, dv, dq_pos
+
+    flash.defvjp(fwd, bwd)
+    return flash
+
+
+def _attend_blockwise(q, k, v, cfg: AttnConfig, q_pos, k_pos, block: int = KV_BLOCK):
+    """Flash (custom_vjp) blockwise attention.  Same signature/semantics as
+    ``_attend_blockwise_ref`` (k_pos assumed contiguous from 0)."""
+    b, s, h, hd = q.shape
+    t0 = k.shape[1]
+    kvh = k.shape[2]
+    group = h // kvh
+    if t0 % block:
+        pad = block - t0 % block
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    qg = (q.reshape(b, s, kvh, group, hd) * jnp.asarray(cfg.scale, q.dtype))
+    flash = _make_flash(_flash_key(cfg, t0, block))
+    out = flash(qg, k, v, q_pos)                     # (B,KVH,G,S,hd)
+    out = jnp.moveaxis(out, 3, 1)
+    return out.reshape(b, s, h, hd)
+
+
+def _attend(q, k, v, cfg: AttnConfig, q_pos, k_pos, valid=None):
+    t = k.shape[1]
+    if t > BLOCKWISE_THRESHOLD and q.shape[1] > 1:
+        return _attend_blockwise(q, k, v, cfg, q_pos, k_pos)
+    return _attend_dense(q, k, v, cfg, q_pos, k_pos, valid)
+
+
+# --------------------------------------------------------------------------
+# public entry points
+# --------------------------------------------------------------------------
+def attention(p, x, cfg: AttnConfig, positions):
+    """Full (training / prefill) self-attention over x: (B, S, D).
+
+    positions: (B, S) int32 (assumed identical across batch for masking —
+    the data pipeline emits unpacked sequences; packing would thread a
+    per-example mask through the config instead).
+    """
+    b, s, _ = x.shape
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    pos = positions[0]
+    out = _attend(q, k, v, cfg, pos, pos)
+    out = out.reshape(b, s, cfg.n_heads * cfg.head_dim)
+    return out @ p["wo"].astype(x.dtype)
+
+
+def init_kv_cache(batch: int, max_len: int, cfg: AttnConfig, dtype=jnp.bfloat16):
+    kvh, hd = cfg.n_kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((batch, max_len, kvh, hd), dtype),
+        "v": jnp.zeros((batch, max_len, kvh, hd), dtype),
+    }
+
+
+def _attend_decode_blockwise(q, ck, cv, cfg: AttnConfig, index,
+                             block: int = 2048):
+    """Online-softmax decode over KV blocks: the cache is sliced and CAST
+    per block (casting the whole 32k x B cache to the compute dtype first
+    doubles its footprint — measured on the qwen decode_32k cell)."""
+    b, s, h, hd = q.shape
+    t = ck.shape[1]
+    kvh = ck.shape[2]
+    group = h // kvh
+    while t % block:
+        block //= 2          # caches are powers of two; find a divisor
+    nb = t // block
+    # blocks are DYNAMIC-SLICED from the cache inside the body — reshaping/
+    # transposing the cache into scan xs would copy the whole (B, T, ...)
+    # buffer (10+ GiB at qwen decode_32k).
+    qg = (q.reshape(b, 1, kvh, group, hd) * jnp.asarray(cfg.scale, q.dtype))
+    base = jnp.arange(block, dtype=jnp.int32)
+
+    def body(carry, _):
+        acc, m_run, l_run, i = carry
+        start = i * block
+        kblk = jax.lax.dynamic_slice_in_dim(ck, start, block, axis=1)
+        vblk = jax.lax.dynamic_slice_in_dim(cv, start, block, axis=1)
+        kp = start + base
+        logits = jnp.einsum("bskgd,btkd->bkgst", qg,
+                            kblk.astype(q.dtype)).astype(jnp.float32)
+        if cfg.softcap is not None:
+            logits = cfg.softcap * jnp.tanh(logits / cfg.softcap)
+        mask = (kp <= index) & (kp < t)
+        if cfg.window is not None:
+            mask &= kp > index - cfg.window
+        logits = jnp.where(mask[None, None, None, None], logits, NEG_INF)
+        m_new = jnp.maximum(m_run, jnp.max(logits, axis=-1))
+        alpha = jnp.exp(m_run - m_new)
+        p_blk = jnp.exp(logits - m_new[..., None])
+        l_new = l_run * alpha + jnp.sum(p_blk, axis=-1)
+        upd = jnp.einsum("bkgst,btkd->bkgsd", p_blk.astype(q.dtype),
+                         vblk.astype(q.dtype))
+        acc = acc * alpha[..., None].astype(q.dtype) + upd
+        return (acc, m_new, l_new, i + 1), None
+
+    acc0 = jnp.zeros((b, kvh, group, 1, hd), q.dtype)
+    m0 = jnp.full((b, kvh, group, 1), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, kvh, group, 1), jnp.float32)
+    (acc, _, l, _), _ = jax.lax.scan(
+        body, (acc0, m0, l0, jnp.zeros((), jnp.int32)), None, length=nb)
+    out = acc / jnp.where(l == 0.0, 1.0, l)[..., None].astype(q.dtype)
+    return jnp.moveaxis(out, 3, 1).reshape(b, 1, h, hd)
+
+
+def attention_decode(p, x, cache, index, cfg: AttnConfig):
+    """One-token decode step.  x: (B, 1, D); cache k/v: (B, T, KVH, hd);
+    index: scalar int32 — current position.  Returns (out, new_cache)."""
+    b = x.shape[0]
+    t = cache["k"].shape[1]
+    positions = jnp.full((b, 1), index, jnp.int32)
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, index, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, index, 0, 0))
+    if t > BLOCKWISE_THRESHOLD:
+        out = _attend_decode_blockwise(q, ck, cv, cfg, index)
+    else:
+        k_pos = jnp.arange(t, dtype=jnp.int32)
+        valid = k_pos <= index
+        q_pos = jnp.full((1,), index, jnp.int32)
+        out = _attend_dense(q, ck.astype(q.dtype), cv.astype(q.dtype), cfg,
+                            q_pos, k_pos, valid)
+    out = out.reshape(b, 1, cfg.n_heads * cfg.head_dim)
+    return out @ p["wo"].astype(x.dtype), {"k": ck, "v": cv}
+
+
+def attention_prefill(p, x, cfg: AttnConfig, positions, max_len: int,
+                      cache_dtype=jnp.bfloat16):
+    """Prefill: full attention over x AND write k/v into a max_len cache."""
+    b, s, _ = x.shape
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    pos = positions[0]
+    out = _attend(q, k, v, cfg, pos, pos)
+    out = out.reshape(b, s, cfg.n_heads * cfg.head_dim)
+    pad = max_len - s
+    ck = jnp.pad(k.astype(cache_dtype), ((0, 0), (0, pad), (0, 0), (0, 0)))
+    cv = jnp.pad(v.astype(cache_dtype), ((0, 0), (0, pad), (0, 0), (0, 0)))
+    return out @ p["wo"].astype(x.dtype), {"k": ck, "v": cv}

@@ -1,0 +1,69 @@
+"""Shared building blocks: norms, embeddings, rotary, softcap, init."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.dist.sharding import shard
+
+
+def param_init(key, shape, scale=0.02, dtype=jnp.float32):
+    return scale * jax.random.normal(key, shape, dtype=dtype)
+
+
+def rms_norm(x, weight, eps: float = 1e-6, plus_one: bool = False):
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    w = weight.astype(jnp.float32)
+    if plus_one:  # gemma convention: weight initialised at 0, used as 1 + w
+        w = 1.0 + w
+    return (y * w).astype(dtype)
+
+
+def softcap(x, cap: float | None):
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+def embed_lookup(table, ids):
+    """Token embedding gather; table may be vocab-sharded over 'model'."""
+    return jnp.take(table, ids, axis=0)
+
+
+# --------------------------------------------------------------------------
+# Rotary position embeddings (NeoX rotate-half convention, partial fraction)
+# --------------------------------------------------------------------------
+def rope_frequencies(head_dim: int, fraction: float, theta: float):
+    rot = int(head_dim * fraction)
+    rot -= rot % 2
+    inv = 1.0 / (theta ** (np.arange(0, rot, 2, dtype=np.float64) / rot))
+    return rot, jnp.asarray(inv, jnp.float32)
+
+
+def apply_rope(x, positions, fraction: float = 1.0, theta: float = 10000.0):
+    """x: (B, S, H, D); positions: (B, S) int32."""
+    d = x.shape[-1]
+    rot, inv = rope_frequencies(d, fraction, theta)
+    if rot == 0:
+        return x
+    angles = positions[..., None].astype(jnp.float32) * inv  # (B, S, rot/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    xr, xp = x[..., :rot], x[..., rot:]
+    x1, x2 = xr[..., : rot // 2], xr[..., rot // 2:]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    out = jnp.concatenate([y1, y2], axis=-1)
+    if rot < d:
+        out = jnp.concatenate([out, xp], axis=-1)
+    return out.astype(x.dtype)
+
+
+__all__ = [
+    "apply_rope", "embed_lookup", "param_init", "rms_norm", "rope_frequencies",
+    "shard", "softcap",
+]

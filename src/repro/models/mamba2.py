@@ -1,0 +1,206 @@
+"""Mamba2 (SSD) block — the zamba2-2.7b backbone (arXiv:2411.15242).
+
+State-space recurrence with SCALAR per-head decay (the SSD restriction):
+
+    h_t = a_t * h_{t-1} + dt_t * (B_t  x_t^T)        h: (N, P) per head
+    y_t = C_t^T h_t + D * x_t
+
+a_t = exp(-softplus(dA) * exp(A_log)) in (0, 1), scalar per head per step.
+Because the decay is scalar, the chunked parallel form is numerically safe
+(decay ratios are (C, C) scalars per head, always <= 1) — implemented below
+and used for training; the step form is used for decode (O(1) state).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import SSMConfig
+from .layers import param_init, shard
+
+
+def init_mamba2(key, d_model: int, cfg: SSMConfig, dtype=jnp.float32):
+    d_inner = cfg.expand * d_model
+    nh = d_inner // cfg.head_dim
+    ks = jax.random.split(key, 4)
+    # in_proj packs [z (gate), x, B, C, dt] like the reference implementation
+    d_in_proj = 2 * d_inner + 2 * cfg.d_state + nh
+    return {
+        "in_proj": param_init(ks[0], (d_model, d_in_proj), dtype=dtype),
+        "conv_w": param_init(ks[1], (cfg.d_conv, d_inner + 2 * cfg.d_state),
+                             scale=0.2, dtype=dtype),
+        "conv_b": jnp.zeros((d_inner + 2 * cfg.d_state,), dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(dtype),
+        "dt_bias": jnp.zeros((nh,), dtype),
+        "d_skip": jnp.ones((nh,), dtype),
+        "out_proj": param_init(ks[2], (d_inner, d_model), dtype=dtype),
+        "norm_scale": jnp.ones((d_inner,), dtype),
+    }
+
+
+def _split_proj(p, x, cfg: SSMConfig, d_model: int):
+    d_inner = cfg.expand * d_model
+    nh = d_inner // cfg.head_dim
+    zxbcdt = x @ p["in_proj"].astype(x.dtype)
+    z, xin, bc, dt = jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner, 2 * d_inner + 2 * cfg.d_state], axis=-1
+    )
+    return z, xin, bc, dt, d_inner, nh
+
+
+def _causal_conv(p, u, state=None):
+    """Depthwise causal conv1d over time.  u: (B, S, C)."""
+    w = p["conv_w"].astype(u.dtype)          # (K, C)
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((u.shape[0], k - 1, u.shape[2]), u.dtype)
+    else:
+        pad = state                            # (B, K-1, C)
+    ext = jnp.concatenate([pad, u], axis=1)
+    out = sum(ext[:, i : i + u.shape[1]] * w[i][None, None] for i in range(k))
+    new_state = ext[:, -(k - 1):] if k > 1 else None
+    return jax.nn.silu(out + p["conv_b"].astype(u.dtype)), new_state
+
+
+def _ssd_chunked(xh, bt, ct, a, dt, chunk: int):
+    """Chunked SSD scan.
+
+    xh: (B, S, H, P) inputs; bt/ct: (B, S, N); a: (B, S, H) decay in (0,1);
+    dt: (B, S, H) step sizes.  Returns (y: (B, S, H, P), final_state).
+    """
+    b, s, h, pdim = xh.shape
+    n = bt.shape[-1]
+    assert s % chunk == 0, (s, chunk)
+    g = s // chunk
+    la = jnp.log(a).astype(jnp.float32)                     # (B, S, H) <= 0
+    xr = xh.reshape(b, g, chunk, h, pdim)
+    br = bt.reshape(b, g, chunk, n)
+    cr = ct.reshape(b, g, chunk, n)
+    lar = la.reshape(b, g, chunk, h)
+    dtr = dt.reshape(b, g, chunk, h)
+    # shard the CHUNK-INDEX axis over "model": the intra-chunk work — incl.
+    # the (B, G, C, C, H) decay tensor, the memory hot spot at zamba2
+    # train_4k — is embarrassingly parallel over chunks; only the tiny
+    # (B, H, N, P) inter-chunk state scan is sequential.
+    xr = shard(xr, "batch", "seq_act", None, None, None)
+    br = shard(br, "batch", "seq_act", None, None)
+    cr = shard(cr, "batch", "seq_act", None, None)
+    lar = shard(lar, "batch", "seq_act", None, None)
+    dtr = shard(dtr, "batch", "seq_act", None, None)
+
+    cum = jnp.cumsum(lar, axis=2)                           # (B,G,C,H)
+    cum = shard(cum, "batch", "seq_act", None, None)
+    total = cum[:, :, -1]                                   # (B,G,H)
+
+    # ---- intra-chunk (causal, decay ratios always <= 1) ---------------
+    # score[t, s'] = C_t . B_s' * exp(cum_t - cum_s') * dt_s'   (s' <= t)
+    # every (B, G, C, C, H) tensor is explicitly chunk-sharded: GSPMD left
+    # them replicated otherwise (15 GiB at zamba2 train_4k, §Perf).
+    rel = cum[:, :, :, None, :] - cum[:, :, None, :, :]     # (B,G,C,C,H)
+    rel = shard(rel, "batch", "seq_act", None, None, None)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    decay = jnp.where(tri[None, None, :, :, None], jnp.exp(rel), 0.0)
+    cb = jnp.einsum("bgtn,bgsn->bgts", cr, br).astype(jnp.float32)
+    cb = shard(cb, "batch", "seq_act", None, None)
+    w = cb[..., None] * decay * dtr[:, :, None, :, :]       # (B,G,C,C,H)
+    w = shard(w, "batch", "seq_act", None, None, None)
+    y_intra = jnp.einsum("bgtsh,bgshp->bgthp", w, xr.astype(jnp.float32))
+    y_intra = shard(y_intra, "batch", "seq_act", None, None, None)
+
+    # ---- chunk states: S_g = sum_s exp(total - cum_s) dt_s B_s x_s ----
+    wstate = jnp.exp(total[:, :, None] - cum) * dtr         # (B,G,C,H)
+    sg = jnp.einsum("bgsh,bgsn,bgshp->bghnp", wstate, br,
+                    xr.astype(jnp.float32))                 # per-chunk update
+
+    # ---- inter-chunk scan over G (sequential, tiny) -------------------
+    dec_tot = jnp.exp(total)                                # (B,G,H)
+
+    def step(carry, inp):
+        s_up, d_tot = inp                                    # (B,H,N,P),(B,H)
+        new = carry * d_tot[..., None, None] + s_up
+        return new, carry                                    # emit PREVIOUS
+
+    s0 = jnp.zeros((b, h, n, pdim), jnp.float32)
+    s_final, s_prev = jax.lax.scan(
+        step, s0,
+        (jnp.moveaxis(sg, 1, 0), jnp.moveaxis(dec_tot, 1, 0)),
+    )
+    s_prev = jnp.moveaxis(s_prev, 0, 1)                      # (B,G,H,N,P)
+
+    # ---- inter-chunk contribution: y_t += C_t . (exp(cum_t) S_prev) ---
+    y_inter = jnp.einsum(
+        "bgtn,bgth,bghnp->bgthp", cr.astype(jnp.float32),
+        jnp.exp(cum), s_prev,
+    )
+    y = (y_intra + y_inter).reshape(b, s, h, pdim)
+    return y, s_final
+
+
+def mamba2_forward(p, x, cfg: SSMConfig, d_model: int, state=None):
+    """x: (B, S, D) -> (out, new_state).
+
+    state (decode): dict(ssm=(B,H,N,P) float32, conv=(B,K-1,C)).
+    Training/prefill uses the chunked scan (state in = zeros).
+    """
+    b, s, _ = x.shape
+    dt_ = x.dtype
+    return_final = isinstance(state, str) and state == "final"
+    if return_final:
+        state = None
+    z, xin, bc, dtproj, d_inner, nh = _split_proj(p, x, cfg, d_model)
+    if s > 1:
+        z = shard(z, "batch", "seq_act", None)
+        xin = shard(xin, "batch", "seq_act", None)
+    conv_in = jnp.concatenate([xin, bc], axis=-1)
+    conv_out, conv_state = _causal_conv(
+        p, conv_in, None if state is None else state.get("conv")
+    )
+    xin = conv_out[..., :d_inner]
+    btct = conv_out[..., d_inner:]
+    bt, ct = jnp.split(btct, 2, axis=-1)                     # (B,S,N) each
+
+    dt_act = jax.nn.softplus(
+        dtproj.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32)
+    )                                                        # (B,S,H)
+    a = jnp.exp(-dt_act * jnp.exp(p["a_log"].astype(jnp.float32)))
+
+    xh = xin.reshape(b, s, nh, cfg.head_dim)
+    xh = shard(xh, "batch", None, "heads", None)
+
+    if state is None and s % cfg.chunk == 0 and s > 1:
+        y, s_final = _ssd_chunked(xh, bt, ct, a, dt_act, cfg.chunk)
+        new_state = {"ssm": s_final, "conv": conv_state} if return_final else None
+    else:
+        # exact step scan (decode path / odd lengths)
+        ssm = None if state is None else state.get("ssm")
+        if ssm is None:
+            ssm = jnp.zeros((b, nh, bt.shape[-1], cfg.head_dim), jnp.float32)
+
+        def step(h_c, inp):
+            xt, btt, ctt, at, dtt = inp
+            upd = jnp.einsum("bn,bhp->bhnp", btt, xt * dtt[..., None])
+            h_new = h_c * at[..., None, None] + upd
+            yt = jnp.einsum("bn,bhnp->bhp", ctt, h_new)
+            return h_new, yt
+
+        seq = (
+            jnp.moveaxis(xh.astype(jnp.float32), 1, 0),
+            jnp.moveaxis(bt.astype(jnp.float32), 1, 0),
+            jnp.moveaxis(ct.astype(jnp.float32), 1, 0),
+            jnp.moveaxis(a, 1, 0),
+            jnp.moveaxis(dt_act, 1, 0),
+        )
+        ssm, ys = jax.lax.scan(step, ssm, seq)
+        y = jnp.moveaxis(ys, 0, 1)
+        new_state = {"ssm": ssm, "conv": conv_state}
+
+    y = y + p["d_skip"].astype(jnp.float32)[None, None, :, None] \
+        * xh.astype(jnp.float32)
+    y = y.reshape(b, s, d_inner).astype(dt_)
+
+    # gated RMSNorm (mamba2 convention)
+    y = y * jax.nn.silu(z)
+    var = jnp.mean(jnp.square(y.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = (y.astype(jnp.float32) * jax.lax.rsqrt(var + 1e-6)).astype(dt_)
+    y = y * p["norm_scale"].astype(dt_)
+    return y @ p["out_proj"].astype(dt_), new_state

@@ -1,0 +1,33 @@
+"""Feed-forward variants: SwiGLU (qwen/chatglm/deepseek), GeGLU (gemma2),
+plain GELU (starcoder2, musicgen)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import param_init, shard
+
+
+def init_mlp(key, d_model: int, d_ff: int, kind: str, dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    p = {}
+    if kind in ("swiglu", "geglu"):
+        p["gate"] = param_init(ks[0], (d_model, d_ff), dtype=dtype)
+    p["up"] = param_init(ks[1], (d_model, d_ff), dtype=dtype)
+    p["down"] = param_init(ks[2], (d_ff, d_model), dtype=dtype)
+    return p
+
+
+def mlp(p, x, kind: str):
+    dt = x.dtype
+    up = x @ p["up"].astype(dt)
+    if kind == "swiglu":
+        h = jax.nn.silu(x @ p["gate"].astype(dt)) * up
+    elif kind == "geglu":
+        h = jax.nn.gelu(x @ p["gate"].astype(dt), approximate=True) * up
+    elif kind == "gelu":
+        h = jax.nn.gelu(up, approximate=True)
+    else:
+        raise ValueError(kind)
+    h = shard(h, "batch", None, "ff")
+    return h @ p["down"].astype(dt)

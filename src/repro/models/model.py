@@ -1,0 +1,204 @@
+"""CausalLM — the unified model API used by the trainer, server and dry-run.
+
+Pure functions over plain-dict param pytrees; the class holds only static
+config.  Three entry points mirror the three lowered step kinds:
+
+    logits, aux = model.forward(params, batch)          # train_4k
+    logits, cache = model.prefill(params, batch, max_len)  # prefill_32k
+    logits, cache = model.decode_step(params, tok, cache, index)  # decode_*
+
+Modality frontends are STUBS per the task spec: paligemma's SigLIP image
+tower and musicgen's EnCodec encoder are NOT implemented — `input_specs()`
+feeds precomputed patch embeddings / audio codebook tokens directly:
+
+  * paligemma: batch["prefix_embeds"] (B, 256, D) replaces the image tower
+    output; text tokens follow it; the prefix attends bidirectionally.
+  * musicgen: batch["tokens"] is (B, S, K=4) EnCodec codebook ids; the K
+    codebook embeddings are summed (the MusicGen "delay pattern" flattening
+    is a data-prep concern) and the head predicts all K codebooks per step.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.dist.sharding import shard
+
+from .config import ModelConfig
+from .layers import param_init, rms_norm
+from .transformer import (
+    init_cache,
+    init_stack,
+    stack_decode,
+    stack_forward,
+    stack_prefill,
+)
+
+
+class CausalLM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    # ------------------------------------------------------------------ init
+    def init(self, key) -> dict:
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.param_dtype)
+        k_embed, k_stack, k_head = jax.random.split(key, 3)
+        d = cfg.d_model
+        params: dict = {}
+        if cfg.family == "audio":
+            # one embedding table per codebook, stacked: (K, V, D)
+            keys = jax.random.split(k_embed, cfg.num_codebooks)
+            params["embed"] = {
+                "table": jnp.stack(
+                    [param_init(k, (cfg.vocab_size, d), dtype=dtype) for k in keys]
+                )
+            }
+        else:
+            params["embed"] = {"table": param_init(k_embed, (cfg.vocab_size, d),
+                                                   dtype=dtype)}
+        params["stack"] = init_stack(k_stack, cfg, dtype)
+        params["final_norm"] = (jnp.zeros if cfg.post_norms else jnp.ones)((d,), dtype)
+        if not cfg.tie_embeddings:
+            out_dim = cfg.vocab_size * (cfg.num_codebooks if cfg.family == "audio" else 1)
+            params["lm_head"] = {"w": param_init(k_head, (d, out_dim), dtype=dtype)}
+        return params
+
+    # ----------------------------------------------------------------- embed
+    def _embed(self, params, batch):
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.dtype)
+        table = params["embed"]["table"]
+        if cfg.family == "audio":
+            toks = batch["tokens"]                     # (B, S, K)
+            x = jnp.zeros(toks.shape[:2] + (cfg.d_model,), dt)
+            for kb in range(cfg.num_codebooks):
+                x = x + jnp.take(table[kb], toks[..., kb], axis=0).astype(dt)
+        else:
+            toks = batch["tokens"]                     # (B, S)
+            x = jnp.take(table, toks, axis=0).astype(dt)
+        if cfg.family == "vlm" and "prefix_embeds" in batch:
+            # STUB frontend: precomputed SigLIP patch embeddings
+            x = jnp.concatenate([batch["prefix_embeds"].astype(dt), x], axis=1)
+        if cfg.embed_scale:
+            x = x * jnp.asarray(np.sqrt(cfg.d_model), dt)
+        return shard(x, "batch", "seq_act", None)
+
+    def _positions(self, batch, seq: int):
+        b = batch["tokens"].shape[0]
+        return jnp.broadcast_to(jnp.arange(seq, dtype=jnp.int32)[None], (b, seq))
+
+    def _unembed(self, params, x):
+        cfg = self.cfg
+        dt = x.dtype
+        if cfg.tie_embeddings:
+            table = params["embed"]["table"]
+            if cfg.family == "audio":
+                # (B,S,D) x (K,V,D) -> (B,S,K,V)
+                logits = jnp.einsum("bsd,kvd->bskv", x, table.astype(dt))
+            else:
+                logits = x @ table.astype(dt).T
+        else:
+            w = params["lm_head"]["w"].astype(dt)
+            logits = x @ w
+            if cfg.family == "audio":
+                logits = logits.reshape(x.shape[:2] + (cfg.num_codebooks,
+                                                       cfg.vocab_size))
+        logits = logits.astype(jnp.float32)
+        if cfg.final_softcap is not None:
+            logits = cfg.final_softcap * jnp.tanh(logits / cfg.final_softcap)
+        return shard(logits, "batch", None, "vocab") \
+            if cfg.family != "audio" else logits
+
+    # --------------------------------------------------------------- forward
+    def forward_hidden(self, params, batch):
+        """Stack output before unembedding: (x (B,S,D), aux)."""
+        cfg = self.cfg
+        x = self._embed(params, batch)
+        seq = x.shape[1]
+        prefix = cfg.prefix_tokens if cfg.family == "vlm" else 0
+        positions = self._positions(batch, seq)
+        x, aux = stack_forward(params["stack"], x, cfg, positions, prefix)
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps, plus_one=cfg.post_norms)
+        return x, aux
+
+    def forward(self, params, batch):
+        """Training forward.  Returns (logits, aux_loss)."""
+        x, aux = self.forward_hidden(params, batch)
+        return self._unembed(params, x), aux
+
+    LOSS_CHUNK = 512
+
+    def loss(self, params, batch):
+        """Mean next-token cross entropy (+ MoE aux).  labels < 0 = masked.
+
+        The (B, S, V) f32 logits NEVER materialise: cross entropy is a
+        remat'd scan over sequence chunks, so peak extra memory is one
+        (B, CHUNK, V/shard) panel.  (256k-vocab archs: full logits were
+        3.9 GiB x many live buffers — EXPERIMENTS.md §Perf.)"""
+        cfg = self.cfg
+        x, aux = self.forward_hidden(params, batch)
+        labels = batch["labels"]
+        if cfg.family == "vlm":
+            x = x[:, cfg.prefix_tokens:]        # labels cover text only
+        b, s = x.shape[0], x.shape[1]
+        chunk = min(self.LOSS_CHUNK, s)
+        while s % chunk:
+            chunk -= 1
+        nc = s // chunk
+        xc = x.reshape(b, nc, chunk, x.shape[-1])
+        lc = labels.reshape((b, nc, chunk) + labels.shape[2:])
+
+        def chunk_loss(args):
+            xch, lch = args                      # (B, C, D), (B, C[, K])
+            logits = self._unembed(params, xch)  # (B, C[, K], V) f32
+            lw = (lch >= 0).astype(jnp.float32)
+            lsafe = jnp.maximum(lch, 0)
+            lp = jax.nn.log_softmax(logits, axis=-1)
+            nll = -jnp.take_along_axis(lp, lsafe[..., None], axis=-1)[..., 0]
+            return jnp.sum(nll * lw), jnp.sum(lw)
+
+        def body(carry, args):
+            tot, cnt = carry
+            t, c = jax.checkpoint(chunk_loss)(args)
+            return (tot + t, cnt + c), None
+
+        (tot, cnt), _ = jax.lax.scan(
+            body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+            (jnp.moveaxis(xc, 1, 0), jnp.moveaxis(lc, 1, 0)))
+        ce = tot / jnp.maximum(cnt, 1.0)
+        return ce + aux.astype(jnp.float32), {"ce": ce, "aux": aux}
+
+    # --------------------------------------------------------------- serving
+    def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16):
+        return init_cache(self.cfg, batch, max_len, dtype)
+
+    def prefill(self, params, batch, max_len: int, cache_dtype=jnp.bfloat16):
+        """Prompt forward + cache build.  Returns (last-token logits, cache)."""
+        cfg = self.cfg
+        x = self._embed(params, batch)
+        seq = x.shape[1]
+        prefix = cfg.prefix_tokens if cfg.family == "vlm" else 0
+        positions = self._positions(batch, seq)
+        x, cache = stack_prefill(params["stack"], x, cfg, positions, max_len,
+                                 cache_dtype, prefix)
+        x = rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps,
+                     plus_one=cfg.post_norms)
+        return self._unembed(params, x), cache
+
+    def decode_step(self, params, tokens, cache, index):
+        """One serve step.  tokens: (B, 1) (or (B, 1, K) audio); index: int32
+        scalar current position.  Returns (logits, new_cache)."""
+        cfg = self.cfg
+        x = self._embed(params, {"tokens": tokens})
+        x, cache = stack_decode(params["stack"], x, cache, index, cfg)
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps, plus_one=cfg.post_norms)
+        return self._unembed(params, x), cache
+
+    # ------------------------------------------------------------- reporting
+    def param_count(self, params) -> int:
+        return sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))

@@ -1,0 +1,225 @@
+"""RWKV-6 "Finch" block (rwkv6-3b): attention-free time mix with
+DATA-DEPENDENT per-channel decay — the arXiv:2404.05892 headline feature.
+
+Recurrence per head (K = V = head_dim):
+
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T          (state: K x V)
+    o_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T)
+
+with w_t = exp(-exp(w0 + tanh(x_t' A_w) B_w)) — a low-rank data-dependent
+decay in (0, 1).  The sequence form here is an exact jax.lax.scan over time
+(linear in S, O(1) decode state); the chunked/Pallas formulation is a perf
+path tracked in EXPERIMENTS.md §Perf (the per-channel decay makes the
+factored chunk form numerically delicate, unlike mamba2's scalar decay).
+
+Decode state is (S, x_prev): fully O(1) in sequence length — this is why
+rwkv6-3b runs the long_500k shape.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import param_init, shard
+
+LORA_R = 64
+
+
+def init_rwkv_block(key, d_model: int, d_ff: int, head_dim: int,
+                    dtype=jnp.float32):
+    ks = jax.random.split(key, 12)
+    h = d_model // head_dim
+    tmix = {
+        "wr": param_init(ks[0], (d_model, d_model), dtype=dtype),
+        "wk": param_init(ks[1], (d_model, d_model), dtype=dtype),
+        "wv": param_init(ks[2], (d_model, d_model), dtype=dtype),
+        "wg": param_init(ks[3], (d_model, d_model), dtype=dtype),
+        "wo": param_init(ks[4], (d_model, d_model), dtype=dtype),
+        # token-shift lerp coefficients per projection (r, k, v, g, w)
+        "mix": 0.5 * jnp.ones((5, d_model), dtype),
+        # data-dependent decay: w0 + tanh(x A) B  (low-rank)
+        "w0": jnp.full((d_model,), -2.0, dtype),
+        "wa": param_init(ks[5], (d_model, LORA_R), dtype=dtype),
+        "wb": param_init(ks[6], (LORA_R, d_model), scale=0.002, dtype=dtype),
+        "u": param_init(ks[7], (d_model,), scale=0.5, dtype=dtype),
+        "ln_scale": jnp.ones((h, head_dim), dtype),   # per-head group norm
+    }
+    cmix = {
+        "wr": param_init(ks[8], (d_model, d_model), dtype=dtype),
+        "wk": param_init(ks[9], (d_model, d_ff), dtype=dtype),
+        "wv": param_init(ks[10], (d_ff, d_model), dtype=dtype),
+        "mix": 0.5 * jnp.ones((2, d_model), dtype),
+    }
+    return {"tmix": tmix, "cmix": cmix}
+
+
+def _token_shift(x, x_prev):
+    """x: (B, S, D); x_prev: (B, D) carry from the previous segment."""
+    return jnp.concatenate([x_prev[:, None], x[:, :-1]], axis=1)
+
+
+def _decay(p, xm):
+    """Data-dependent decay w_t in (0,1): (B, S, D) -> (B, S, D) float32."""
+    lr = jnp.tanh(xm.astype(jnp.float32) @ p["wa"].astype(jnp.float32))
+    logit = p["w0"].astype(jnp.float32) + lr @ p["wb"].astype(jnp.float32)
+    return jnp.exp(-jnp.exp(logit))
+
+
+# --------------------------------------------------------------------------
+# chunked WKV6 (the perf path for training/prefill)
+# --------------------------------------------------------------------------
+WKV_CHUNK = 32
+_EXP_CLIP = 60.0    # |exponent| clip for the intra-chunk factorisation
+
+
+def _wkv6_chunked(r, k, v, w, u, state, chunk: int = WKV_CHUNK):
+    """Chunked WKV6: state I/O once per CHUNK instead of once per step.
+
+    r/k/v: (B,S,H,K) f32; w: (B,S,H,K) decay in (0,1); u: (H,K);
+    state: (B,H,K,V) initial.  Returns (o (B,S,H,V), final state).
+
+    Safety analysis (the per-CHANNEL decay makes the factored form
+    delicate — DESIGN.md): the inter-chunk state update uses
+    exp(cum_C - cum_s) <= 1 and the inter-chunk output uses
+    exp(cum_{t-1}) <= 1 — both exact.  Only the intra-chunk attention
+    factorises as exp(cum_{t-1}) * exp(-cum_s) whose second factor can
+    overflow under EXTREME in-chunk decay; exponents are clipped at
+    +-_EXP_CLIP, exact whenever the per-chunk total decay exponent is
+    below ~60 (trained RWKV decay ranges sit far below this; validated
+    against the exact scan in tests/test_models_rwkv.py)."""
+    b, s, h, kd = r.shape
+    g = s // chunk
+    vd = v.shape[-1]
+
+    def cshape(x):
+        return x.reshape(b, g, chunk, h, kd)
+
+    rr, kk, vv, ww = cshape(r), cshape(k), cshape(v), cshape(w)
+    rr = shard(rr, "batch", "seq_act", None, None, None)
+    kk = shard(kk, "batch", "seq_act", None, None, None)
+    vv = shard(vv, "batch", "seq_act", None, None, None)
+    ww = shard(ww, "batch", "seq_act", None, None, None)
+    logw = jnp.log(jnp.maximum(ww, 1e-38))            # (B,G,C,H,K) <= 0
+    cum = jnp.cumsum(logw, axis=2)
+    cum_prev = cum - logw                             # cum_{t-1} (0 at t=0)
+    cum_last = cum[:, :, -1]                          # (B,G,H,K)
+
+    # ---- inter-chunk states (exact; exponents <= 0) -------------------
+    decay_k = jnp.exp(cum_last[:, :, None] - cum)     # (B,G,C,H,K) <= 1
+    sg = jnp.einsum("bgchk,bgchv->bghkv", decay_k * kk, vv)
+
+    def gstep(S, inp):
+        sgi, dtot = inp                               # (B,H,K,V), (B,H,K)
+        S_new = S * jnp.exp(dtot)[..., None] + sgi
+        return S_new, S                               # emit PREVIOUS state
+
+    S_final, S_prev = jax.lax.scan(
+        gstep, state, (jnp.moveaxis(sg, 1, 0), jnp.moveaxis(cum_last, 1, 0)))
+    S_prev = jnp.moveaxis(S_prev, 0, 1)               # (B,G,H,K,V)
+
+    # ---- inter-chunk output (exact; exponents <= 0) -------------------
+    o_inter = jnp.einsum("bgchk,bghkv->bgchv", rr * jnp.exp(cum_prev), S_prev)
+
+    # ---- intra-chunk attention (factored; clipped exponents) ----------
+    r2 = rr * jnp.exp(jnp.clip(cum_prev, -_EXP_CLIP, _EXP_CLIP))
+    k2 = kk * jnp.exp(jnp.clip(-cum, -_EXP_CLIP, _EXP_CLIP))
+    a = jnp.einsum("bgchk,bgshk->bghcs", r2, k2)      # (B,G,H,C,C)
+    a = shard(a, "batch", "seq_act", None, None, None)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)
+    a = jnp.where(tri[None, None, None], a, 0.0)
+    diag = jnp.einsum("bgchk,hk,bgchk->bgch", rr, u, kk)
+    o_intra = jnp.einsum("bghcs,bgshv->bgchv", a, vv) \
+        + diag[..., None] * vv
+    o = (o_inter + o_intra).reshape(b, s, h, vd)
+    return o, S_final
+
+
+def time_mix(p, x, head_dim: int, state=None, x_prev=None):
+    """RWKV6 time mix.  x: (B, S, D).  Returns (out, (state, x_last)).
+
+    state: (B, H, K, V) carried WKV state (zeros for fresh sequences).
+    """
+    b, s, d = x.shape
+    h = d // head_dim
+    dt = x.dtype
+    if x_prev is None:
+        x_prev = jnp.zeros((b, d), dt)
+    xs = _token_shift(x, x_prev)
+    mix = p["mix"].astype(dt)
+    xr, xk, xv, xg, xw = (x + mix[i][None, None] * (xs - x) for i in range(5))
+
+    r = (xr @ p["wr"].astype(dt)).reshape(b, s, h, head_dim)
+    k = (xk @ p["wk"].astype(dt)).reshape(b, s, h, head_dim)
+    v = (xv @ p["wv"].astype(dt)).reshape(b, s, h, head_dim)
+    g = jax.nn.silu(xg @ p["wg"].astype(dt))
+    w = _decay(p, xw).reshape(b, s, h, head_dim)
+
+    u = p["u"].astype(jnp.float32).reshape(h, head_dim)
+    if state is None:
+        state = jnp.zeros((b, h, head_dim, head_dim), jnp.float32)
+
+    def step(S, inp):
+        rt, kt, vt, wt = inp  # (B, H, K) / (B, H, V) / decay (B, H, K)
+        kv = kt[..., :, None] * vt[..., None, :]              # (B,H,K,V)
+        ot = jnp.einsum("bhk,bhkv->bhv", rt, S + u[None, :, :, None] * kv)
+        S = wt[..., :, None] * S + kv
+        return S, ot
+
+    seq = (
+        jnp.moveaxis(r.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(k.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(v.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(w, 1, 0),
+    )
+    # Chunked WKV6 (state I/O once per chunk, matmul-formulated) when the
+    # length divides the chunk; exact per-step scan otherwise (decode, odd
+    # lengths).  The chunked form is validated against the exact scan in
+    # tests; see _wkv6_chunked for the numerics discussion.
+    if s > WKV_CHUNK and s % WKV_CHUNK == 0:
+        o4, state = _wkv6_chunked(
+            r.astype(jnp.float32), k.astype(jnp.float32),
+            v.astype(jnp.float32), w, u, state)
+        o = o4.reshape(b, s, h, head_dim)
+    else:
+        state, o = jax.lax.scan(step, state, seq)             # o: (S,B,H,V)
+        o = jnp.moveaxis(o, 0, 1).reshape(b, s, h, head_dim)
+
+    # per-head group norm
+    mean = jnp.mean(o, axis=-1, keepdims=True)
+    var = jnp.var(o, axis=-1, keepdims=True)
+    o = (o - mean) * jax.lax.rsqrt(var + 1e-5) * p["ln_scale"][None, None]
+    o = o.reshape(b, s, d).astype(dt) * g
+    out = o @ p["wo"].astype(dt)
+    return out, (state, x[:, -1])
+
+
+def channel_mix(p, x, x_prev=None):
+    b, s, d = x.shape
+    dt = x.dtype
+    if x_prev is None:
+        x_prev = jnp.zeros((b, d), dt)
+    xs = _token_shift(x, x_prev)
+    mix = p["mix"].astype(dt)
+    xk = x + mix[0][None, None] * (xs - x)
+    xr = x + mix[1][None, None] * (xs - x)
+    kk = jnp.square(jax.nn.relu(xk @ p["wk"].astype(dt)))
+    kk = shard(kk, "batch", None, "ff")
+    out = jax.nn.sigmoid(xr @ p["wr"].astype(dt)) * (kk @ p["wv"].astype(dt))
+    return out, x[:, -1]
+
+
+def rwkv_block(p, x, head_dim: int, norm_fn, state=None):
+    """One RWKV6 layer: time mix + channel mix with pre-norms.
+
+    state: None (training) or dict(wkv=(B,H,K,V), tshift1=(B,D), tshift2=(B,D)).
+    """
+    st = state or {}
+    att, (wkv, xl1) = time_mix(
+        p["tmix"], norm_fn(x, 0), head_dim,
+        st.get("wkv"), st.get("tshift1"),
+    )
+    x = x + att
+    ff, xl2 = channel_mix(p["cmix"], norm_fn(x, 1), st.get("tshift2"))
+    x = x + ff
+    new_state = {"wkv": wkv, "tshift1": xl1, "tshift2": xl2}
+    return x, new_state

@@ -1,0 +1,715 @@
+"""Unified decoder stack for all assigned architecture families.
+
+Layer stacking strategy (compile-time scaling — a 64-layer dry-run must not
+emit 64 copies of the layer HLO):
+
+* ``dense``   — all layers identical -> one `jax.lax.scan` over stacked params.
+                gemma2's local/global alternation packs TWO layers (one local,
+                one global) per scan step ("superlayer"), so the scanned body
+                is still uniform.
+* ``moe``     — `first_dense` unscanned dense layers, then a scan over the
+                remaining (identical) MoE layers.
+* ``ssm``     — rwkv6 blocks, one scan.
+* ``hybrid``  — zamba2: scan over groups of `attn_every` mamba2 layers; a
+                SHARED attention+MLP block (single param copy) is applied once
+                per group with per-invocation LoRA deltas on q/k/v (stacked
+                over invocations, threaded through the scan as xs).
+
+Every scanned body is wrapped in `jax.checkpoint` (remat): only the residual
+stream between layers is saved; matmul interiors recompute in backward.
+
+Decode variants thread caches through the same scans: KV caches are stacked
+(L, B, T, KVH, HD) so one-token decode is one scan, not L separate HLO blocks.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.dist.sharding import shard
+
+from .attention import (
+    AttnConfig,
+    attention,
+    attention_decode,
+    attention_prefill,
+    init_attn,
+)
+from .config import ModelConfig
+from .layers import rms_norm
+from .mamba2 import init_mamba2, mamba2_forward
+from .mlp import init_mlp, mlp
+from .moe import init_moe, moe_ffn, moe_ffn_auto
+from .rwkv6 import init_rwkv_block, rwkv_block
+
+LORA_RANK = 128  # zamba2 per-invocation adapter rank
+
+
+# --------------------------------------------------------------------------
+# helpers
+# --------------------------------------------------------------------------
+def attn_cfg_for(cfg: ModelConfig, window: int | None, prefix_len: int = 0) -> AttnConfig:
+    return AttnConfig(
+        d_model=cfg.d_model,
+        n_heads=cfg.n_heads,
+        n_kv_heads=cfg.n_kv_heads,
+        head_dim=cfg.hd,
+        qkv_bias=cfg.qkv_bias,
+        rope_fraction=cfg.rope_fraction,
+        rope_theta=cfg.rope_theta,
+        softcap=cfg.attn_softcap,
+        window=window,
+        prefix_len=prefix_len,
+        query_scale=cfg.query_scale,
+    )
+
+
+def _stack_init(fn, key, n: int):
+    """vmap an init function over n per-layer keys -> stacked param pytree."""
+    return jax.vmap(fn)(jax.random.split(key, n))
+
+
+def _norm(p, x, eps, plus_one):
+    return rms_norm(x, p, eps, plus_one=plus_one)
+
+
+# --------------------------------------------------------------------------
+# dense transformer block (attention + MLP), optional gemma2 post-norms
+# --------------------------------------------------------------------------
+def init_dense_block(key, cfg: ModelConfig, dtype) -> dict:
+    k1, k2 = jax.random.split(key)
+    d = cfg.d_model
+    dff = cfg.dense_ff or cfg.d_ff
+    norm_init = jnp.zeros if cfg.post_norms else jnp.ones  # gemma "1+w"
+    p = {
+        "attn": init_attn(k1, attn_cfg_for(cfg, None), dtype),
+        "mlp": init_mlp(k2, d, dff, cfg.mlp, dtype),
+        "norm_attn": norm_init((d,), dtype),
+        "norm_mlp": norm_init((d,), dtype),
+    }
+    if cfg.post_norms:
+        p["post_attn"] = jnp.zeros((d,), dtype)
+        p["post_mlp"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def dense_block(p, x, cfg: ModelConfig, acfg: AttnConfig, positions):
+    plus_one = cfg.post_norms
+    h = _norm(p["norm_attn"], x, cfg.norm_eps, plus_one)
+    a = attention(p["attn"], h, acfg, positions)
+    if cfg.post_norms:
+        a = _norm(p["post_attn"], a, cfg.norm_eps, True)
+    x = x + a
+    h = _norm(p["norm_mlp"], x, cfg.norm_eps, plus_one)
+    m = mlp(p["mlp"], h, cfg.mlp)
+    if cfg.post_norms:
+        m = _norm(p["post_mlp"], m, cfg.norm_eps, True)
+    return shard(x + m, "batch", "seq_act", None)
+
+
+def dense_block_decode(p, x, cache, index, cfg: ModelConfig, acfg: AttnConfig):
+    plus_one = cfg.post_norms
+    h = _norm(p["norm_attn"], x, cfg.norm_eps, plus_one)
+    a, cache = attention_decode(p["attn"], h, cache, index, acfg)
+    if cfg.post_norms:
+        a = _norm(p["post_attn"], a, cfg.norm_eps, True)
+    x = x + a
+    h = _norm(p["norm_mlp"], x, cfg.norm_eps, plus_one)
+    m = mlp(p["mlp"], h, cfg.mlp)
+    if cfg.post_norms:
+        m = _norm(p["post_mlp"], m, cfg.norm_eps, True)
+    return x + m, cache
+
+
+def dense_block_prefill(p, x, cfg, acfg, positions, max_len, cache_dtype):
+    plus_one = cfg.post_norms
+    h = _norm(p["norm_attn"], x, cfg.norm_eps, plus_one)
+    a, cache = attention_prefill(p["attn"], h, acfg, positions, max_len, cache_dtype)
+    if cfg.post_norms:
+        a = _norm(p["post_attn"], a, cfg.norm_eps, True)
+    x = x + a
+    h = _norm(p["norm_mlp"], x, cfg.norm_eps, plus_one)
+    m = mlp(p["mlp"], h, cfg.mlp)
+    if cfg.post_norms:
+        m = _norm(p["post_mlp"], m, cfg.norm_eps, True)
+    return x + m, cache
+
+
+# --------------------------------------------------------------------------
+# MoE block
+# --------------------------------------------------------------------------
+def init_moe_block(key, cfg: ModelConfig, dtype) -> dict:
+    k1, k2 = jax.random.split(key)
+    d = cfg.d_model
+    return {
+        "attn": init_attn(k1, attn_cfg_for(cfg, None), dtype),
+        "moe": init_moe(k2, d, cfg.d_ff, cfg.moe, cfg.mlp, dtype),
+        "norm_attn": jnp.ones((d,), dtype),
+        "norm_mlp": jnp.ones((d,), dtype),
+    }
+
+
+def moe_block(p, x, cfg: ModelConfig, acfg: AttnConfig, positions):
+    h = _norm(p["norm_attn"], x, cfg.norm_eps, False)
+    x = x + attention(p["attn"], h, acfg, positions)
+    h = _norm(p["norm_mlp"], x, cfg.norm_eps, False)
+    h = shard(h, "batch", "seq_act", None)   # EP path expects (dp, sp) layout
+    m, aux = moe_ffn_auto(p["moe"], h, cfg.moe, cfg.mlp)
+    return shard(x + m, "batch", "seq_act", None), aux
+
+
+def moe_block_decode(p, x, cache, index, cfg: ModelConfig, acfg: AttnConfig):
+    h = _norm(p["norm_attn"], x, cfg.norm_eps, False)
+    a, cache = attention_decode(p["attn"], h, cache, index, acfg)
+    x = x + a
+    h = _norm(p["norm_mlp"], x, cfg.norm_eps, False)
+    m, _ = moe_ffn(p["moe"], h, cfg.moe, cfg.mlp)
+    return x + m, cache
+
+
+def moe_block_prefill(p, x, cfg, acfg, positions, max_len, cache_dtype):
+    h = _norm(p["norm_attn"], x, cfg.norm_eps, False)
+    a, cache = attention_prefill(p["attn"], h, acfg, positions, max_len, cache_dtype)
+    x = x + a
+    h = _norm(p["norm_mlp"], x, cfg.norm_eps, False)
+    h = shard(h, "batch", "seq_act", None)
+    m, _ = moe_ffn_auto(p["moe"], h, cfg.moe, cfg.mlp)
+    return x + m, cache
+
+
+# --------------------------------------------------------------------------
+# rwkv6 layer (block params + its two pre-norms)
+# --------------------------------------------------------------------------
+def init_rwkv_layer(key, cfg: ModelConfig, dtype) -> dict:
+    d = cfg.d_model
+    return {
+        "block": init_rwkv_block(key, d, cfg.d_ff, cfg.ssm.head_dim, dtype),
+        "norm1": jnp.ones((d,), dtype),
+        "norm2": jnp.ones((d,), dtype),
+    }
+
+
+def rwkv_layer(p, x, cfg: ModelConfig, state=None):
+    def norm_fn(h, i):
+        return _norm(p["norm1"] if i == 0 else p["norm2"], h, cfg.norm_eps, False)
+
+    x, new_state = rwkv_block(p["block"], x, cfg.ssm.head_dim, norm_fn, state)
+    return shard(x, "batch", "seq_act", None), new_state
+
+
+# --------------------------------------------------------------------------
+# zamba2 hybrid: mamba2 backbone + one shared attention block + LoRA deltas
+# --------------------------------------------------------------------------
+def init_mamba_layer(key, cfg: ModelConfig, dtype) -> dict:
+    return {
+        "ssm": init_mamba2(key, cfg.d_model, cfg.ssm, dtype),
+        "norm": jnp.ones((cfg.d_model,), dtype),
+    }
+
+
+def mamba_layer(p, x, cfg: ModelConfig, state=None):
+    h = _norm(p["norm"], x, cfg.norm_eps, False)
+    y, new_state = mamba2_forward(p["ssm"], h, cfg.ssm, cfg.d_model, state)
+    return shard(x + y, "batch", "seq_act", None), new_state
+
+
+def init_shared_attn(key, cfg: ModelConfig, dtype) -> dict:
+    """zamba2's single shared attention+MLP block.
+
+    Input is concat([x, x0]) (x0 = original embedding stream), so the q/k/v
+    projections take 2*d_model; wo maps back to d_model.
+    """
+    k1, k2 = jax.random.split(key)
+    d = cfg.d_model
+    wide_cfg = dataclasses.replace(attn_cfg_for(cfg, None), d_model=2 * d)
+    attn_p = init_attn(k1, wide_cfg, dtype)
+    # q/k/v read the 2d concat stream; the output projection returns to d
+    attn_p["wo"] = 0.02 / np.sqrt(2) * jax.random.normal(
+        jax.random.fold_in(k1, 1), (cfg.n_heads * cfg.hd, d), dtype)
+    return {
+        "attn": attn_p,
+        "mlp": init_mlp(k2, d, cfg.d_ff, cfg.mlp, dtype),
+        "norm_attn": jnp.ones((2 * d,), dtype),
+        "norm_mlp": jnp.ones((d,), dtype),
+    }
+
+
+def init_lora(key, cfg: ModelConfig, dtype) -> dict:
+    """One invocation's LoRA deltas for the shared block q/k/v (stacked by
+    the caller over n_invocations)."""
+    d2 = 2 * cfg.d_model
+    ks = jax.random.split(key, 3)
+
+    def mk(k, out_dim):
+        return {
+            "a": 0.02 * jax.random.normal(k, (d2, LORA_RANK), dtype),
+            "b": jnp.zeros((LORA_RANK, out_dim), dtype),
+        }
+
+    return {
+        "q": mk(ks[0], cfg.n_heads * cfg.hd),
+        "k": mk(ks[1], cfg.n_kv_heads * cfg.hd),
+        "v": mk(ks[2], cfg.n_kv_heads * cfg.hd),
+    }
+
+
+def _lora_weights(sp, lora, dt):
+    """Shared attention weights with this invocation's LoRA deltas folded in."""
+    p = sp["attn"]
+    out = dict(p)
+    for name, key in (("wq", "q"), ("wk", "k"), ("wv", "v")):
+        delta = lora[key]["a"].astype(dt) @ lora[key]["b"].astype(dt)
+        out[name] = p[name].astype(dt) + delta
+    return out
+
+
+def shared_attn_apply(sp, lora, x, x0, cfg: ModelConfig, acfg: AttnConfig, positions):
+    h2 = jnp.concatenate([x, x0], axis=-1)
+    h2 = _norm(sp["norm_attn"], h2, cfg.norm_eps, False)
+    a = attention(_lora_weights(sp, lora, h2.dtype), h2, acfg, positions)
+    x = x + a
+    h = _norm(sp["norm_mlp"], x, cfg.norm_eps, False)
+    return x + mlp(sp["mlp"], h, cfg.mlp)
+
+
+def shared_attn_decode(sp, lora, x, x0, cache, index, cfg: ModelConfig, acfg: AttnConfig):
+    h2 = jnp.concatenate([x, x0], axis=-1)
+    h2 = _norm(sp["norm_attn"], h2, cfg.norm_eps, False)
+    a, cache = attention_decode(_lora_weights(sp, lora, h2.dtype), h2, cache, index, acfg)
+    x = x + a
+    h = _norm(sp["norm_mlp"], x, cfg.norm_eps, False)
+    return x + mlp(sp["mlp"], h, cfg.mlp), cache
+
+
+def shared_attn_prefill(sp, lora, x, x0, cfg, acfg, positions, max_len, cache_dtype):
+    h2 = jnp.concatenate([x, x0], axis=-1)
+    h2 = _norm(sp["norm_attn"], h2, cfg.norm_eps, False)
+    a, cache = attention_prefill(
+        _lora_weights(sp, lora, h2.dtype), h2, acfg, positions, max_len, cache_dtype)
+    x = x + a
+    h = _norm(sp["norm_mlp"], x, cfg.norm_eps, False)
+    return x + mlp(sp["mlp"], h, cfg.mlp), cache
+
+
+# ==========================================================================
+# Stacks: init + forward + decode + prefill per family
+# ==========================================================================
+def init_stack(key, cfg: ModelConfig, dtype) -> dict:
+    fam = cfg.family
+    if fam == "dense" or fam == "vlm" or fam == "audio":
+        if cfg.layer_pattern == "local_global":
+            assert cfg.n_layers % 2 == 0
+
+            def pair(k):
+                ka, kb = jax.random.split(k)
+                return {"local": init_dense_block(ka, cfg, dtype),
+                        "global": init_dense_block(kb, cfg, dtype)}
+
+            return {"pairs": _stack_init(pair, key, cfg.n_layers // 2)}
+        return {"layers": _stack_init(lambda k: init_dense_block(k, cfg, dtype),
+                                      key, cfg.n_layers)}
+    if fam == "moe":
+        k1, k2 = jax.random.split(key)
+        out = {"moe_layers": _stack_init(lambda k: init_moe_block(k, cfg, dtype),
+                                         k2, cfg.n_layers - cfg.first_dense)}
+        if cfg.first_dense:
+            out["dense_layers"] = _stack_init(
+                lambda k: init_dense_block(k, cfg, dtype), k1, cfg.first_dense)
+        return out
+    if fam == "ssm":
+        return {"layers": _stack_init(lambda k: init_rwkv_layer(k, cfg, dtype),
+                                      key, cfg.n_layers)}
+    if fam == "hybrid":
+        assert cfg.n_layers % cfg.attn_every == 0
+        groups = cfg.n_layers // cfg.attn_every
+        k1, k2, k3 = jax.random.split(key, 3)
+        return {
+            "mamba": _stack_init(lambda k: init_mamba_layer(k, cfg, dtype),
+                                 k1, cfg.n_layers),
+            "shared": init_shared_attn(k2, cfg, dtype),
+            "lora": _stack_init(lambda k: init_lora(k, cfg, dtype), k3, groups),
+        }
+    raise ValueError(fam)
+
+
+def _remat(fn):
+    return jax.checkpoint(fn, prevent_cse=False)
+
+
+def stack_forward(params, x, cfg: ModelConfig, positions, prefix_len: int = 0):
+    """Run the full layer stack.  x: (B, S, D).  Returns (x, aux_loss)."""
+    fam = cfg.family
+    aux0 = jnp.zeros((), jnp.float32)
+
+    if fam in ("dense", "vlm", "audio"):
+        if cfg.layer_pattern == "local_global":
+            a_loc = attn_cfg_for(cfg, cfg.local_window, prefix_len)
+            a_glo = attn_cfg_for(cfg, None, prefix_len)
+
+            def body(h, p):
+                h = dense_block(p["local"], h, cfg, a_loc, positions)
+                h = dense_block(p["global"], h, cfg, a_glo, positions)
+                return h, None
+
+            x, _ = jax.lax.scan(_remat(body), x, params["pairs"])
+            return x, aux0
+        acfg = attn_cfg_for(cfg, None, prefix_len)
+
+        def body(h, p):
+            return dense_block(p, h, cfg, acfg, positions), None
+
+        x, _ = jax.lax.scan(_remat(body), x, params["layers"])
+        return x, aux0
+
+    if fam == "moe":
+        acfg = attn_cfg_for(cfg, None, prefix_len)
+        if cfg.first_dense:
+            def dbody(h, p):
+                return dense_block(p, h, cfg, acfg, positions), None
+            x, _ = jax.lax.scan(_remat(dbody), x, params["dense_layers"])
+
+        def mbody(h, p):
+            h, aux = moe_block(p, h, cfg, acfg, positions)
+            return h, aux
+
+        x, auxs = jax.lax.scan(_remat(mbody), x, params["moe_layers"])
+        return x, jnp.sum(auxs)
+
+    if fam == "ssm":
+        def body(h, p):
+            h, _ = rwkv_layer(p, h, cfg)
+            return h, None
+
+        x, _ = jax.lax.scan(_remat(body), x, params["layers"])
+        return x, aux0
+
+    if fam == "hybrid":
+        acfg = attn_cfg_for(cfg, None, prefix_len)
+        ae = cfg.attn_every
+        groups = cfg.n_layers // ae
+        # reshape stacked mamba params (L, ...) -> (G, ae, ...)
+        mamba_g = jax.tree.map(
+            lambda a: a.reshape((groups, ae) + a.shape[1:]), params["mamba"])
+        x0 = x
+
+        def gbody(h, inp):
+            mparams, lora = inp
+
+            def inner(hh, p):
+                hh, _ = mamba_layer(p, hh, cfg)
+                return hh, None
+
+            h, _ = jax.lax.scan(inner, h, mparams)
+            h = shared_attn_apply(params["shared"], lora, h, x0, cfg, acfg, positions)
+            return h, None
+
+        x, _ = jax.lax.scan(_remat(gbody), x, (mamba_g, params["lora"]))
+        return x, aux0
+
+    raise ValueError(fam)
+
+
+# --------------------------------------------------------------------------
+# caches
+# --------------------------------------------------------------------------
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    """Decode-state pytree for one-token serve steps, stacked over layers."""
+    fam = cfg.family
+    kvh, hd = cfg.n_kv_heads, cfg.hd
+
+    def kv(n):
+        return {"k": jnp.zeros((n, batch, max_len, kvh, hd), dtype),
+                "v": jnp.zeros((n, batch, max_len, kvh, hd), dtype)}
+
+    if fam in ("dense", "vlm", "audio"):
+        if cfg.layer_pattern == "local_global":
+            half = cfg.n_layers // 2
+            local_len = min(max_len, (cfg.local_window or max_len))
+            return {"local": {"k": jnp.zeros((half, batch, local_len, kvh, hd), dtype),
+                              "v": jnp.zeros((half, batch, local_len, kvh, hd), dtype)},
+                    "global": kv(half)}
+        return {"layers": kv(cfg.n_layers)}
+    if fam == "moe":
+        out = {"moe_layers": kv(cfg.n_layers - cfg.first_dense)}
+        if cfg.first_dense:
+            out["dense_layers"] = kv(cfg.first_dense)
+        return out
+    if fam == "ssm":
+        d, hdm = cfg.d_model, cfg.ssm.head_dim
+        h = d // hdm
+        n = cfg.n_layers
+        return {
+            "wkv": jnp.zeros((n, batch, h, hdm, hdm), jnp.float32),
+            "tshift1": jnp.zeros((n, batch, d), dtype),
+            "tshift2": jnp.zeros((n, batch, d), dtype),
+        }
+    if fam == "hybrid":
+        d_inner = cfg.ssm.expand * cfg.d_model
+        nh = d_inner // cfg.ssm.head_dim
+        conv_c = d_inner + 2 * cfg.ssm.d_state
+        groups = cfg.n_layers // cfg.attn_every
+        return {
+            "ssm": jnp.zeros((cfg.n_layers, batch, nh, cfg.ssm.d_state,
+                              cfg.ssm.head_dim), jnp.float32),
+            "conv": jnp.zeros((cfg.n_layers, batch, cfg.ssm.d_conv - 1, conv_c), dtype),
+            "attn_kv": kv(groups),
+        }
+    raise ValueError(fam)
+
+
+def _scan_decode(layer_fn, x, params_stacked, cache_stacked, n: int):
+    """Scan layers for one-token decode with the cache in the CARRY.
+
+    Threading the stacked cache as scan xs + ys double-buffers it (input
+    stack and emitted stack are distinct 10+ GiB allocations at decode_32k);
+    as a loop-carried buffer updated via dynamic_update_index it stays
+    single-buffered and donation-aliases with the step input."""
+    def body(carry, inp):
+        h, cache = carry
+        p, i = inp
+        c_i = jax.tree.map(
+            lambda a: jax.lax.dynamic_index_in_dim(a, i, 0, keepdims=False),
+            cache)
+        h, c_new = layer_fn(p, h, c_i)
+        cache = jax.tree.map(
+            lambda a, u: jax.lax.dynamic_update_index_in_dim(
+                a, u.astype(a.dtype), i, 0), cache, c_new)
+        return (h, cache), None
+
+    (x, cache), _ = jax.lax.scan(
+        body, (x, cache_stacked),
+        (params_stacked, jnp.arange(n, dtype=jnp.int32)))
+    return x, cache
+
+
+def stack_decode(params, x, cache, index, cfg: ModelConfig):
+    """One-token decode through the stack.  x: (B, 1, D)."""
+    fam = cfg.family
+
+    if fam in ("dense", "vlm", "audio"):
+        if cfg.layer_pattern == "local_global":
+            a_loc = attn_cfg_for(cfg, cfg.local_window)
+            a_glo = attn_cfg_for(cfg, None)
+
+            def pair_fn(p, h, c):
+                cl, cg = c
+                h, cl = _decode_ring(p["local"], h, cl, index, cfg, a_loc)
+                h, cg = dense_block_decode(p["global"], h, cg, index, cfg, a_glo)
+                return h, (cl, cg)
+
+            half = cfg.n_layers // 2
+            x, (cl, cg) = _scan_decode(
+                pair_fn, x, params["pairs"],
+                (cache["local"], cache["global"]), half)
+            return x, {"local": cl, "global": cg}
+        acfg = attn_cfg_for(cfg, None)
+
+        def fn(p, h, c):
+            return dense_block_decode(p, h, c, index, cfg, acfg)
+
+        x, c = _scan_decode(fn, x, params["layers"], cache["layers"],
+                            cfg.n_layers)
+        return x, {"layers": c}
+
+    if fam == "moe":
+        acfg = attn_cfg_for(cfg, None)
+        new_cache = {}
+        if cfg.first_dense:
+            def dfn(p, h, c):
+                return dense_block_decode(p, h, c, index, cfg, acfg)
+            x, cd = _scan_decode(dfn, x, params["dense_layers"],
+                                 cache["dense_layers"], cfg.first_dense)
+            new_cache["dense_layers"] = cd
+
+        def mfn(p, h, c):
+            return moe_block_decode(p, h, c, index, cfg, acfg)
+
+        x, cm = _scan_decode(mfn, x, params["moe_layers"],
+                             cache["moe_layers"],
+                             cfg.n_layers - cfg.first_dense)
+        new_cache["moe_layers"] = cm
+        return x, new_cache
+
+    if fam == "ssm":
+        def fn(p, h, c):
+            return rwkv_layer(p, h, cfg, c)
+
+        states = {"wkv": cache["wkv"], "tshift1": cache["tshift1"],
+                  "tshift2": cache["tshift2"]}
+        x, new_states = _scan_decode(fn, x, params["layers"], states,
+                                     cfg.n_layers)
+        return x, new_states
+
+    if fam == "hybrid":
+        acfg = attn_cfg_for(cfg, None)
+        ae = cfg.attn_every
+        groups = cfg.n_layers // ae
+        mamba_g = jax.tree.map(
+            lambda a: a.reshape((groups, ae) + a.shape[1:]), params["mamba"])
+        ssm_g = cache["ssm"].reshape((groups, ae) + cache["ssm"].shape[1:])
+        conv_g = cache["conv"].reshape((groups, ae) + cache["conv"].shape[1:])
+        x0 = x
+
+        def gfn(p, h, c):
+            mparams, lora = p
+            ssm_s, conv_s, kv = c
+
+            def inner(hh, pin):
+                pp, s1, s2 = pin
+                hh, st = mamba_layer(pp, hh, cfg, {"ssm": s1, "conv": s2})
+                return hh, (st["ssm"], st["conv"])
+
+            h, (ssm_n, conv_n) = jax.lax.scan(inner, h, (mparams, ssm_s, conv_s))
+            h, kv = shared_attn_decode(params["shared"], lora, h, x0, kv,
+                                       index, cfg, acfg)
+            return h, (ssm_n, conv_n, kv)
+
+        x, (ssm_n, conv_n, kv_n) = _scan_decode(
+            gfn, x, (mamba_g, params["lora"]),
+            (ssm_g, conv_g, cache["attn_kv"]), groups)
+        return x, {
+            "ssm": ssm_n.reshape(cache["ssm"].shape),
+            "conv": conv_n.reshape(cache["conv"].shape),
+            "attn_kv": kv_n,
+        }
+
+    raise ValueError(fam)
+
+
+def _decode_ring(p, x, cache, index, cfg: ModelConfig, acfg: AttnConfig):
+    """Decode against a ring-buffer local cache (length = window)."""
+    plus_one = cfg.post_norms
+    h = _norm(p["norm_attn"], x, cfg.norm_eps, plus_one)
+    b = x.shape[0]
+    tlen = cache["k"].shape[1]
+    positions = jnp.full((b, 1), index, jnp.int32)
+    from .attention import _attend_dense, _project_qkv  # local import, same module family
+
+    q, k, v = _project_qkv(p["attn"], h, acfg, positions)
+    slot = jnp.mod(index, tlen)
+    ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                      (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                      (0, slot, 0, 0))
+    # absolute position of each ring slot given current write index
+    slots = jnp.arange(tlen, dtype=jnp.int32)
+    age = jnp.mod(slot - slots, tlen)          # 0 = newest
+    k_pos = index - age
+    valid = k_pos >= 0
+    q_pos = jnp.full((1,), index, jnp.int32)
+    a = _attend_dense(q, ck.astype(q.dtype), cv.astype(q.dtype), acfg,
+                      q_pos, k_pos, valid)
+    a = a.reshape(b, 1, acfg.n_heads * acfg.head_dim) @ p["attn"]["wo"].astype(x.dtype)
+    if cfg.post_norms:
+        a = _norm(p["post_attn"], a, cfg.norm_eps, True)
+    x = x + a
+    h = _norm(p["norm_mlp"], x, cfg.norm_eps, plus_one)
+    m = mlp(p["mlp"], h, cfg.mlp)
+    if cfg.post_norms:
+        m = _norm(p["post_mlp"], m, cfg.norm_eps, True)
+    return x + m, {"k": ck, "v": cv}
+
+
+def stack_prefill(params, x, cfg: ModelConfig, positions, max_len: int,
+                  cache_dtype=jnp.bfloat16, prefix_len: int = 0):
+    """Forward over the prompt, returning (x, decode cache at `max_len`)."""
+    fam = cfg.family
+    b, s, _ = x.shape
+
+    if fam in ("dense", "vlm", "audio"):
+        if cfg.layer_pattern == "local_global":
+            a_loc = attn_cfg_for(cfg, cfg.local_window, prefix_len)
+            a_glo = attn_cfg_for(cfg, None, prefix_len)
+            local_len = min(max_len, (cfg.local_window or max_len))
+
+            def body(h, p):
+                h, cl_full = dense_block_prefill(
+                    p["local"], h, cfg, a_loc, positions, max_len, cache_dtype)
+                h, cg = dense_block_prefill(
+                    p["global"], h, cfg, a_glo, positions, max_len, cache_dtype)
+                # fold the tail of the full-length kv into the ring buffer
+                cl = _ring_from_full(cl_full, s, local_len)
+                return h, (cl, cg)
+
+            x, (cl, cg) = jax.lax.scan(_remat(body), x, params["pairs"])
+            return x, {"local": cl, "global": cg}
+        acfg = attn_cfg_for(cfg, None, prefix_len)
+
+        def body(h, p):
+            return dense_block_prefill(p, h, cfg, acfg, positions, max_len,
+                                       cache_dtype)
+
+        x, c = jax.lax.scan(_remat(body), x, params["layers"])
+        return x, {"layers": c}
+
+    if fam == "moe":
+        acfg = attn_cfg_for(cfg, None, prefix_len)
+        out_cache = {}
+        if cfg.first_dense:
+            def dbody(h, p):
+                return dense_block_prefill(p, h, cfg, acfg, positions, max_len,
+                                           cache_dtype)
+            x, cd = jax.lax.scan(_remat(dbody), x, params["dense_layers"])
+            out_cache["dense_layers"] = cd
+
+        def mbody(h, p):
+            return moe_block_prefill(p, h, cfg, acfg, positions, max_len,
+                                     cache_dtype)
+
+        x, cm = jax.lax.scan(_remat(mbody), x, params["moe_layers"])
+        out_cache["moe_layers"] = cm
+        return x, out_cache
+
+    if fam == "ssm":
+        def body(h, p):
+            h, st = rwkv_layer(p, h, cfg, state=None)
+            return h, st
+
+        x, states = jax.lax.scan(_remat(body), x, params["layers"])
+        return x, states   # {"wkv": (L,B,H,K,V), "tshift1/2": (L,B,D)}
+
+    if fam == "hybrid":
+        acfg = attn_cfg_for(cfg, None, prefix_len)
+        ae = cfg.attn_every
+        groups = cfg.n_layers // ae
+        mamba_g = jax.tree.map(
+            lambda a: a.reshape((groups, ae) + a.shape[1:]), params["mamba"])
+        x0 = x
+
+        def gbody(h, inp):
+            mparams, lora = inp
+
+            def inner(hh, p):
+                hh, st = mamba_layer(p, hh, cfg, state="final")
+                return hh, st
+
+            h, sts = jax.lax.scan(inner, h, mparams)
+            h, kv = shared_attn_prefill(params["shared"], lora, h, x0, cfg,
+                                        acfg, positions, max_len, cache_dtype)
+            return h, (sts, kv)
+
+        x, (sts, kvs) = jax.lax.scan(_remat(gbody), x, (mamba_g, params["lora"]))
+        ssm = sts["ssm"].reshape((cfg.n_layers,) + sts["ssm"].shape[2:])
+        conv = sts["conv"].reshape((cfg.n_layers,) + sts["conv"].shape[2:])
+        return x, {"ssm": ssm, "conv": conv, "attn_kv": kvs}
+
+    raise ValueError(fam)
+
+
+def _ring_from_full(cache, s: int, local_len: int):
+    """Take the last min(s, local_len) kv entries of a full prefill cache and
+    lay them out at ring slots (pos mod local_len)."""
+    def fold(a):
+        # a: (B, max_len, KVH, HD); entries 0..s-1 valid
+        take = min(s, local_len)
+        start = s - take
+        tail = jax.lax.dynamic_slice_in_dim(a, start, take, axis=1)
+        slots = jnp.mod(start + jnp.arange(take), local_len)
+        out = jnp.zeros((a.shape[0], local_len) + a.shape[2:], a.dtype)
+        return out.at[:, slots].set(tail)
+
+    return {"k": fold(cache["k"]), "v": fold(cache["v"])}

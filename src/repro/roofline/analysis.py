@@ -1,0 +1,203 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh) cell, in SECONDS (task spec):
+
+    compute    = HLO_FLOPs    / (chips * peak_FLOP/s)
+    memory     = HLO_bytes    / (chips * HBM_bw)
+    collective = coll_bytes   / (chips * link_bw)
+
+Hardware constants are the task-given TPU v5e numbers.  Notes:
+
+* ``compiled.cost_analysis()`` on an SPMD-partitioned module reports the
+  PER-DEVICE program's flops/bytes.  per_device / per_chip_peak equals
+  global / (chips * peak) for a balanced program, so we report
+  per-device metrics divided by single-chip peaks and record global
+  figures as per_device * chips.
+* collective bytes are NOT in cost_analysis: we parse the post-SPMD HLO
+  (``compiled.as_text()``) and sum OPERAND sizes of every all-gather /
+  all-reduce / reduce-scatter / all-to-all / collective-permute
+  (async ``-start`` forms counted once; ``-done`` skipped).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+import numpy as np
+
+# TPU v5e (task-given constants)
+PEAK_FLOPS = 197e12        # bf16 FLOP/s per chip
+HBM_BW = 819e9             # bytes/s per chip
+ICI_BW = 50e9              # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+# one HLO type literal, e.g. f32[16,128]{1,0} or bf16[2,4,8]
+_TYPE_RE = re.compile(r"\b([a-z]+\d*)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*(?:\([^)]*\)|tuple\([^)]*\)|[a-z0-9]+\[[^\]]*\](?:\{[^}]*\})?)?\s*"
+    r"(" + "|".join(_COLLECTIVES) + r")(-start)?\("
+)
+
+
+def _literal_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims.strip():
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Per-opcode sum of operand bytes across all collective ops (per device).
+
+    Operand types appear inline in the op's argument list:
+        %ag = f32[16,8]{1,0} all-gather(f32[1,8]{1,0} %p), ...
+    ``*-done`` ops consume the start token and carry no payload operands.
+    """
+    out: dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if m is None:
+            continue
+        op = m.group(1)
+        # argument list = everything inside the top-level call parens
+        start = line.index(m.group(0)) + len(m.group(0)) - 1
+        depth = 0
+        end = start
+        for i in range(start, len(line)):
+            if line[i] == "(":
+                depth += 1
+            elif line[i] == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        args = line[start + 1 : end]
+        nbytes = sum(_literal_bytes(d, s) for d, s in _TYPE_RE.findall(args))
+        out[op] = out.get(op, 0) + nbytes
+    return out
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_device: float
+    bytes_per_device: float
+    coll_bytes_per_device: float
+    coll_by_op: dict
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    model_flops: float            # 6*N*D (dense) / 6*N_active*D (MoE), global
+    peak_bytes_per_device: float  # from memory_analysis
+    argument_bytes: float = 0.0
+    output_bytes: float = 0.0
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / global HLO_FLOPs — remat/redundancy waste detector."""
+        total = self.flops_per_device * self.chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def bound_time(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """max(useful-compute-time, useful-memory-time) / achieved-bound-time.
+
+        Useful compute = MODEL_FLOPS at peak; useful memory = reading the
+        step's ARGUMENTS (params + optimizer state + caches) exactly once —
+        the floor for any implementation of the same step.  Decode steps are
+        legitimately memory-bound, so the memory floor is what they should
+        be judged against."""
+        t_useful_c = self.model_flops / (self.chips * PEAK_FLOPS)
+        t_useful_m = self.argument_bytes / HBM_BW
+        return (max(t_useful_c, t_useful_m) / self.bound_time
+                if self.bound_time else 0.0)
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d.update(dominant=self.dominant,
+                 useful_flops_ratio=self.useful_flops_ratio,
+                 roofline_fraction=self.roofline_fraction,
+                 bound_time=self.bound_time)
+        return d
+
+
+def analyze_compiled(compiled, *, arch: str, shape: str, mesh_name: str,
+                     chips: int, model_flops: float) -> RooflineReport:
+    """Derive the three terms from the compiled per-device module.
+
+    flops/bytes/collective come from the structural HLO pass
+    (roofline.hlo_cost) which scales while-loop bodies by their
+    known_trip_count — XLA's own cost_analysis counts loop bodies once,
+    which under a scan-over-layers program undercounts by the layer count
+    (raw XLA numbers are kept in the report for reference).
+    """
+    from .hlo_cost import analyze_hlo
+
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    text = compiled.as_text()
+    hc = analyze_hlo(text)
+    flops = float(hc.flops)
+    nbytes = float(hc.bytes)
+    coll = dict(hc.coll_by_op)
+    coll["xla_raw_flops"] = float(cost.get("flops", 0.0))
+    coll_total = float(hc.collective_bytes)
+    mem = compiled.memory_analysis()
+    peak = float(getattr(mem, "temp_size_in_bytes", 0)
+                 + getattr(mem, "output_size_in_bytes", 0)
+                 + getattr(mem, "generated_code_size_in_bytes", 0))
+    return RooflineReport(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+        flops_per_device=flops,
+        bytes_per_device=nbytes,
+        coll_bytes_per_device=coll_total,
+        coll_by_op=coll,
+        t_compute=flops / PEAK_FLOPS,
+        t_memory=nbytes / HBM_BW,
+        t_collective=coll_total / ICI_BW,
+        model_flops=model_flops,
+        peak_bytes_per_device=peak,
+        argument_bytes=float(getattr(mem, "argument_size_in_bytes", 0)),
+        output_bytes=float(getattr(mem, "output_size_in_bytes", 0)),
+    )
+
+
+def model_flops_for(cfg, shape_kind: str, seq_len: int, global_batch: int) -> float:
+    """6*N*D for train, 2*N*D for prefill, 2*N_active per token for decode.
+
+    N = active params (exact eval_shape count; excludes unrouted experts,
+    counts zamba2's shared block once per invocation); D = tokens.
+    """
+    from repro.configs import param_stats
+
+    total, active = param_stats(cfg)
+    tokens = global_batch * (seq_len if shape_kind != "decode" else 1)
+    mult = 6.0 if shape_kind == "train" else 2.0
+    return mult * active * tokens

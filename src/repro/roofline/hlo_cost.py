@@ -1,0 +1,393 @@
+"""Structural cost pass over optimized HLO text.
+
+XLA's built-in ``compiled.cost_analysis()`` counts every while-loop body
+ONCE — a scan-over-layers program (ours) is undercounted by the layer count,
+and the FSDP all-gathers inside the scan vanish from any naive collective
+byte count.  This pass re-derives flops / bytes / collective-bytes from the
+post-optimization HLO with correct loop multiplicities:
+
+* computations are parsed into (name -> [ops]) with a per-computation
+  symbol table (op name -> output type) so operand shapes resolve even
+  though optimized HLO omits inline operand types;
+* the walk starts at ENTRY with multiplicity 1;
+* ``while`` ops multiply body+condition costs by the ``known_trip_count``
+  recorded by XLA in backend_config (1 if absent);
+* ``fusion`` ops recurse for FLOPs but count BYTES only at the fusion
+  boundary (operands + outputs) — the same memory model XLA itself uses;
+* ``dot`` FLOPs = 2 * |output| * |contracting dims| (batched included);
+* collective ops (all-gather / all-reduce / reduce-scatter / all-to-all /
+  collective-permute, sync or ``-start``) accumulate OPERAND bytes, scaled
+  by the enclosing loop multiplicity.
+
+Verified against XLA cost_analysis on loop-free programs in
+tests/test_roofline.py (exact agreement on dot flops).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s2": 1, "u2": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_TYPE_RE = re.compile(r"\b([a-z]+\d+|pred|token|opaque)\[([\d,]*)\]")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_SKIP_BYTES_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota",
+}
+
+
+def _type_bytes(types) -> int:
+    return sum(_elems(d) * _DTYPE_BYTES.get(t, 4) for t, d in types)
+
+
+def _elems(dims: str) -> int:
+    n = 1
+    if dims.strip():
+        for d in dims.split(","):
+            n *= int(d)
+    return n
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    opcode: str
+    out_types: list            # [(dtype, dims_str), ...]
+    arg_names: list            # ["%x.1", ...]
+    line: str
+    attrs: str
+    called: list               # computation names referenced
+    trip_count: int = 1
+
+
+_OPCODE_RE = re.compile(
+    r"=\s*(?:\([^=]*?\)\s*|(?:[a-z]+\d+|pred|token|opaque)\[[^\]]*\](?:\{[^}]*\})?\s*)"
+    r"([a-z][a-z0-9\-]*)\(")
+_CALLED_RE = re.compile(
+    r"(?:calls|to_apply|condition|body)=\{?%?([\w.\-]+)")
+_CALLED_MULTI_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"')
+_ARGNAME_RE = re.compile(r"%([\w.\-]+)")
+
+
+_COMMENT_RE = re.compile(r"/\*.*?\*/")
+
+
+def _parse_op(line: str) -> Op | None:
+    line = _COMMENT_RE.sub("", line).strip()
+    if not (line.startswith("%") or line.startswith("ROOT")):
+        return None
+    m = _OPCODE_RE.search(line)
+    if m is None:
+        return None
+    opcode = m.group(1)
+    eq = line.index("=")
+    lhs, rhs = line[:eq], line[eq + 1:]
+    head = rhs[: rhs.index(opcode + "(")]
+    out_types = _TYPE_RE.findall(head)
+    start = rhs.index(opcode + "(") + len(opcode)
+    depth, end = 0, start
+    for i in range(start, len(rhs)):
+        if rhs[i] == "(":
+            depth += 1
+        elif rhs[i] == ")":
+            depth -= 1
+            if depth == 0:
+                end = i
+                break
+    args = rhs[start + 1 : end]
+    attrs = rhs[end + 1:]
+    called = []
+    mm = _CALLED_MULTI_RE.search(attrs)
+    if mm:
+        called += re.findall(r"%?([\w.\-]+)", mm.group(1))
+    for c in _CALLED_RE.findall(attrs):
+        if c not in called:
+            called.append(c)
+    trip = 1
+    tm = _TRIP_RE.search(attrs)
+    if tm:
+        trip = int(tm.group(1))
+    name = lhs.strip().split(" ")[0]
+    if name == "ROOT":
+        name = lhs.strip().split(" ")[1]
+    return Op(
+        name=name.lstrip("%"),
+        opcode=opcode,
+        out_types=out_types,
+        arg_names=[a for a in _ARGNAME_RE.findall(args)],
+        line=line,
+        attrs=attrs,
+        called=called,
+        trip_count=trip,
+    )
+
+
+_COMP_HDR_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*\{\s*$")
+
+
+def parse_hlo(text: str):
+    """-> ({comp name: [ops]}, {comp name: {op name: out_types}}, entry)."""
+    comps: dict[str, list[Op]] = {}
+    symtabs: dict[str, dict] = {}
+    entry = None
+    cur = None
+    cur_name = None
+    for raw in text.splitlines():
+        line = raw.strip()
+        if cur is None:
+            m = _COMP_HDR_RE.match(line)
+            if m:
+                cur_name = m.group(2)
+                comps[cur_name] = []
+                symtabs[cur_name] = {}
+                cur = comps[cur_name]
+                if m.group(1):
+                    entry = cur_name
+        else:
+            if line.startswith("}"):
+                cur = None
+                continue
+            op = _parse_op(line)
+            if op is not None:
+                cur.append(op)
+                symtabs[cur_name][op.name] = op.out_types
+    if entry is None and comps:
+        entry = max(comps, key=lambda k: len(comps[k]))
+    return comps, symtabs, entry
+
+
+# --------------------------------------------------------------------------
+# per-op local costs
+# --------------------------------------------------------------------------
+_DOT_CDIMS_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "negate", "abs", "maximum", "minimum",
+    "compare", "select", "and", "or", "xor", "not", "clamp", "floor",
+    "ceil", "sign", "round-nearest-afz", "round-nearest-even",
+    "shift-left", "shift-right-logical", "shift-right-arithmetic",
+    "exponential", "tanh", "log", "rsqrt", "sqrt", "power", "logistic",
+    "sine", "cosine", "expm1", "log1p", "erf", "divide", "atan2", "cbrt",
+    "exponential-minus-one", "remainder", "convert", "is-finite",
+}
+
+
+def _arg_types(op: Op, symtab: dict) -> list:
+    out = []
+    for a in op.arg_names:
+        t = symtab.get(a)
+        if t:
+            out.extend(t)
+    return out
+
+
+def _dot_flops(op: Op, symtab: dict) -> float:
+    out_elems = sum(_elems(d) for _, d in op.out_types)
+    m = _DOT_CDIMS_RE.search(op.line)
+    contract = 1
+    lhs_types = symtab.get(op.arg_names[0]) if op.arg_names else None
+    if m and lhs_types:
+        dims = lhs_types[0][1]
+        sizes = [int(x) for x in dims.split(",")] if dims.strip() else []
+        for idx in (int(i) for i in m.group(1).split(",") if i != ""):
+            if idx < len(sizes):
+                contract *= sizes[idx]
+    return 2.0 * out_elems * contract
+
+
+def _local_flops(op: Op, symtab: dict) -> float:
+    oc = op.opcode
+    out_elems = sum(_elems(d) for _, d in op.out_types)
+    if oc == "dot":
+        return _dot_flops(op, symtab)
+    if oc in ("reduce", "reduce-window"):
+        return float(sum(_elems(d) for _, d in _arg_types(op, symtab)) or out_elems)
+    if oc in _ELEMENTWISE:
+        return float(out_elems)
+    if oc == "convolution":
+        ats = _arg_types(op, symtab)
+        if len(ats) >= 2:
+            return 2.0 * out_elems * _elems(ats[1][1]) / max(1, out_elems)
+        return 0.0
+    return 0.0
+
+
+_SLICING_OPS = {"slice", "dynamic-slice", "gather"}
+
+
+def _boundary_bytes(op: Op, symtab: dict) -> float:
+    """Operand + output bytes, with slicing ops counted by what they TOUCH
+    (output-sized reads), not by the full operand they index into — a
+    dynamic-slice out of a loop-carried buffer reads one slice per trip."""
+    if op.opcode in _SKIP_BYTES_OPS or op.opcode == "while":
+        return 0.0
+    out_b = _type_bytes(op.out_types)
+    if op.opcode in _SLICING_OPS:
+        return float(2 * out_b)
+    if op.opcode == "dynamic-update-slice":
+        # reads + writes the update slice (second operand), in place
+        ats = _arg_types(op, symtab)
+        upd = _type_bytes(ats[1:2]) if len(ats) > 1 else out_b
+        return float(2 * upd)
+    if op.opcode == "scatter":
+        ats = _arg_types(op, symtab)
+        upd = _type_bytes(ats[2:]) if len(ats) > 2 else out_b
+        return float(2 * upd)
+    return float(out_b + _type_bytes(_arg_types(op, symtab)))
+
+
+def _fusion_bytes(op: Op, comps: dict, symtabs: dict, symtab: dict) -> float:
+    """HBM traffic of one fusion execution.
+
+    XLA fuses interiors into registers; traffic happens only for (a) the
+    root write and (b) each parameter read.  Two refinements matter for
+    loop bodies:
+      * a fusion whose ROOT is dynamic-update-slice aliases its buffer
+        parameter in place — traffic is 2x the UPDATE slice, not the full
+        buffer;
+      * a parameter consumed ONLY by slice/dynamic-slice/gather ops is read
+        only at the slices' output sizes (loop-carried stacked buffers).
+    """
+    inner_name = next((c for c in op.called if c in comps), None)
+    if inner_name is None:
+        return _boundary_bytes(op, symtab)
+    inner = comps[inner_name]
+    inner_sym = symtabs[inner_name]
+    root = inner[-1] if inner else None
+
+    total = 0.0
+    # --- root write ---
+    if root is not None and root.opcode == "dynamic-update-slice":
+        upd_types = inner_sym.get(root.arg_names[1], []) if len(root.arg_names) > 1 else []
+        total += 2.0 * _type_bytes(upd_types or root.out_types)
+    else:
+        total += _type_bytes(op.out_types)
+
+    # --- parameter reads ---
+    params = [o for o in inner if o.opcode == "parameter"]
+    consumers: dict[str, list[Op]] = {}
+    for o in inner:
+        for a in o.arg_names:
+            consumers.setdefault(a, []).append(o)
+    for i, pop in enumerate(params):
+        # outer operand type (authoritative); fall back to the param's type
+        outer_types = symtab.get(op.arg_names[i], pop.out_types) \
+            if i < len(op.arg_names) else pop.out_types
+        full = _type_bytes(outer_types)
+        cons = consumers.get(pop.name, [])
+        if cons and all(
+            c.opcode in _SLICING_OPS
+            or (c.opcode == "dynamic-update-slice" and c.arg_names
+                and c.arg_names[0] == pop.name)
+            for c in cons
+        ):
+            sliced = sum(_type_bytes(c.out_types) for c in cons
+                         if c.opcode in _SLICING_OPS)
+            total += float(min(full, sliced))
+        else:
+            total += float(full)
+    return total
+
+
+# --------------------------------------------------------------------------
+# the walk
+# --------------------------------------------------------------------------
+@dataclasses.dataclass
+class HloCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collective_bytes: float = 0.0
+    coll_by_op: dict = dataclasses.field(default_factory=dict)
+    dots_flops: float = 0.0
+    loops_seen: int = 0
+
+
+def analyze_hlo(text: str) -> HloCost:
+    comps, symtabs, entry = parse_hlo(text)
+    cost = HloCost()
+    memo: dict[str, tuple] = {}
+
+    def comp_cost(name: str):
+        if name in memo:
+            return memo[name]
+        fl = by = cb = df = 0.0
+        cbo: dict[str, float] = defaultdict(float)
+        symtab = symtabs.get(name, {})
+        for op in comps.get(name, []):
+            oc = op.opcode
+            base = oc[:-6] if oc.endswith("-start") else oc
+            if base in _COLLECTIVES:
+                nbytes = _type_bytes(_arg_types(op, symtab))
+                cb += nbytes
+                cbo[base] += nbytes
+                by += _boundary_bytes(op, symtab)
+                continue
+            if oc.endswith("-done") or oc.endswith("-update-done"):
+                continue
+            if oc == "while":
+                t = op.trip_count
+                cost.loops_seen += 1
+                for c in op.called:
+                    if c not in comps:
+                        continue
+                    f2, b2, c2, o2, d2 = comp_cost(c)
+                    fl += f2 * t
+                    by += b2 * t
+                    cb += c2 * t
+                    df += d2 * t
+                    for k, v in o2.items():
+                        cbo[k] += v * t
+                continue
+            if oc == "fusion":
+                for c in op.called:
+                    if c in comps:
+                        f2, _, c2, o2, d2 = comp_cost(c)
+                        fl += f2
+                        cb += c2
+                        df += d2
+                        for k, v in o2.items():
+                            cbo[k] += v
+                by += _fusion_bytes(op, comps, symtabs, symtab)
+                continue
+            if oc in ("call", "conditional", "custom-call", "map", "sort",
+                      "scatter", "select-and-scatter", "reduce-scatter"):
+                subs = [comp_cost(c) for c in op.called if c in comps]
+                if oc == "conditional" and subs:
+                    subs = [max(subs, key=lambda s: s[0])]
+                if oc in ("map", "sort", "scatter", "select-and-scatter"):
+                    subs = []  # tiny apply fns; counted via boundary bytes
+                for (f2, b2, c2, o2, d2) in subs:
+                    fl += f2
+                    by += b2
+                    cb += c2
+                    df += d2
+                    for k, v in o2.items():
+                        cbo[k] += v
+                by += _boundary_bytes(op, symtab)
+                continue
+            f = _local_flops(op, symtab)
+            fl += f
+            if oc == "dot":
+                df += f
+            by += _boundary_bytes(op, symtab)
+        out = (fl, by, cb, dict(cbo), df)
+        memo[name] = out
+        return out
+
+    fl, by, cb, cbo, df = comp_cost(entry)
+    cost.flops = fl
+    cost.bytes = by
+    cost.collective_bytes = cb
+    cost.coll_by_op = cbo
+    cost.dots_flops = df
+    return cost

@@ -1,0 +1,126 @@
+"""Batched serving driver: prefill + decode loop with a fixed-slot batch.
+
+The paper-analogy (DESIGN.md §5): requests are packed into FIXED slots (the
+same fixed-bucket idiom as the LBM tiles / MoE capacity buffers) — a free
+slot is refilled from the queue at the next prefill opportunity, so the
+decode kernel shape never changes and the jit cache stays warm.
+
+`decode_fn` / `prefill_fn` are the jit-compiled pure functions the dry-run
+lowers on the production mesh; this driver is host-side bookkeeping only.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model import CausalLM
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray              # (S,) int32
+    max_new_tokens: int = 32
+    temperature: float = 0.0        # 0 = greedy
+    out_tokens: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, model: CausalLM, params, batch_slots: int,
+                 max_len: int, cache_dtype=jnp.float32, seed: int = 0):
+        self.model = model
+        self.params = params
+        self.slots = batch_slots
+        self.max_len = max_len
+        self.key = jax.random.PRNGKey(seed)
+
+        self.cache = model.init_cache(batch_slots, max_len, cache_dtype)
+        self.active: list[Request | None] = [None] * batch_slots
+        self.positions = np.zeros(batch_slots, dtype=np.int32)
+        self.queue: list[Request] = []
+        self.finished: list[Request] = []
+
+        self._decode = jax.jit(model.decode_step)
+        # prefill is per-slot (batch 1) so prompts of one length share a trace
+        self._prefill = jax.jit(
+            partial(self._prefill_impl), static_argnames=("plen",))
+
+    def _prefill_impl(self, params, tokens, plen):
+        return self.model.prefill(
+            params, {"tokens": tokens}, self.max_len,
+            cache_dtype=self.cache_tree_dtype())
+
+    def cache_tree_dtype(self):
+        return jax.tree.leaves(self.cache)[0].dtype
+
+    # ------------------------------------------------------------------ api
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _admit(self):
+        """Fill free slots: run prefill for queued requests and splice their
+        caches into the batch cache at the slot index."""
+        for slot in range(self.slots):
+            if self.active[slot] is not None or not self.queue:
+                continue
+            req = self.queue.pop(0)
+            plen = len(req.prompt)
+            toks = jnp.asarray(req.prompt, jnp.int32)[None]
+            logits, cache1 = self._prefill(self.params, toks, plen=plen)
+            # splice the single-sequence cache into slot `slot`
+            self.cache = jax.tree.map(
+                lambda full, one: jax.lax.dynamic_update_index_in_dim(
+                    full, one[:, 0] if one.ndim > full.ndim - 1 else one[0],
+                    slot, axis=1)
+                if full.ndim >= 2 else full,
+                self.cache, cache1)
+            first = self._sample(logits[:, 0])[0]
+            req.out_tokens.append(int(first))
+            self.active[slot] = req
+            self.positions[slot] = plen
+
+    def _sample(self, logits):
+        if logits.ndim == 3:        # audio (B, K, V)
+            logits = logits
+        self.key, sub = jax.random.split(self.key)
+        return np.asarray(jnp.argmax(logits, axis=-1)).reshape(-1)
+
+    def step(self):
+        """One decode step for all occupied slots."""
+        self._admit()
+        occupied = [i for i, r in enumerate(self.active) if r is not None]
+        if not occupied:
+            return False
+        # all slots decode at one shared index per step: use per-slot index
+        # by running the max position (simple baseline: slots decode in
+        # lockstep; production path would use per-slot indices via vmap)
+        toks = np.zeros((self.slots, 1), dtype=np.int32)
+        for i in occupied:
+            toks[i, 0] = self.active[i].out_tokens[-1]
+        idx = int(max(self.positions[i] for i in occupied))
+        logits, self.cache = self._decode(
+            self.params, jnp.asarray(toks), self.cache,
+            jnp.asarray(idx, jnp.int32))
+        nxt = self._sample(logits[:, 0])
+        for i in occupied:
+            req = self.active[i]
+            req.out_tokens.append(int(nxt[i]))
+            self.positions[i] += 1
+            if len(req.out_tokens) >= req.max_new_tokens:
+                req.done = True
+                self.finished.append(req)
+                self.active[i] = None
+        return True
+
+    def run(self, max_steps: int = 10_000):
+        steps = 0
+        while (self.queue or any(self.active)) and steps < max_steps:
+            if not self.step():
+                break
+            steps += 1
+        return self.finished

@@ -1,0 +1,72 @@
+"""train_step factory: loss + grad + AdamW under jit, with optional
+microbatch gradient accumulation and gradient compression.
+
+The returned function is pure `(params, opt_state, batch, step) ->
+(params, opt_state, metrics)` — the launcher decides shardings/donation at
+the jit site, so the same step lowers on 1 CPU device and on the 512-chip
+production mesh unchanged.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import CausalLM
+from repro.optim.adamw import AdamWConfig, apply_updates
+
+
+def make_train_step(model: CausalLM, opt_cfg: AdamWConfig,
+                    microbatches: int = 1, compressor=None):
+    """compressor: optional repro.dist.compress.Compressor applied to grads
+    (quantise -> dequantise with error feedback folded into opt_state by the
+    caller; here it is a pure transform used for ablation tests)."""
+
+    def loss_fn(params, batch):
+        loss, metrics = model.loss(params, batch)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(params, opt_state, batch, step):
+        if microbatches == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+        else:
+            # split the global batch into microbatches and accumulate
+            def slice_mb(x, i):
+                mb = x.shape[0] // microbatches
+                return jax.lax.dynamic_slice_in_dim(x, i * mb, mb, axis=0)
+
+            def body(carry, i):
+                acc, loss_acc = carry
+                mb = jax.tree.map(lambda x: slice_mb(x, i), batch)
+                (l, m), g = grad_fn(params, mb)
+                acc = jax.tree.map(jnp.add, acc, g)
+                return (acc, loss_acc + l), m
+
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum, loss_sum), ms = jax.lax.scan(
+                body, (zeros, jnp.zeros((), jnp.float32)),
+                jnp.arange(microbatches))
+            grads = jax.tree.map(lambda g: (g / microbatches).astype(jnp.float32), gsum)
+            loss = loss_sum / microbatches
+            metrics = jax.tree.map(lambda x: x[-1], ms)
+
+        if compressor is not None:
+            grads = compressor.roundtrip(grads)
+
+        params, opt_state, opt_metrics = apply_updates(
+            params, opt_state, grads, opt_cfg, step)
+        out_metrics = {"loss": loss, **metrics, **opt_metrics}
+        return params, opt_state, out_metrics
+
+    return train_step
+
+
+def make_eval_step(model: CausalLM):
+    def eval_step(params, batch):
+        loss, metrics = model.loss(params, batch)
+        return {"loss": loss, **metrics}
+
+    return eval_step

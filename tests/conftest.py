@@ -1,0 +1,15 @@
+import os
+
+# Smoke tests and benches must see the REAL device count (1 CPU device) —
+# only launch/dryrun.py forces 512 placeholder devices, in its own process.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

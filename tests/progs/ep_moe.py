@@ -1,0 +1,19 @@
+"""Multi-device prog: EP MoE == global MoE (run under 8 fake devices)."""
+import jax, jax.numpy as jnp
+from repro.models.moe import init_moe, moe_ffn, moe_ffn_ep
+from repro.models.config import MoEConfig
+from repro.dist.sharding import set_axis_sizes
+
+mesh = jax.make_mesh((4, 2), ("data", "model"))
+set_axis_sizes(mesh)
+cfg = MoEConfig(n_experts=8, top_k=2, n_shared=1, capacity_factor=8.0)
+p = init_moe(jax.random.PRNGKey(0), 64, 96, cfg, "swiglu")
+x = jax.random.normal(jax.random.PRNGKey(1), (8, 16, 64), jnp.float32)
+out_ref, aux_ref = moe_ffn(p, x, cfg, "swiglu")
+with mesh:
+    out_ep, aux_ep = jax.jit(
+        lambda p, x: moe_ffn_ep(p, x, cfg, "swiglu", mesh, ("data",)))(p, x)
+err = float(jnp.max(jnp.abs(out_ep - out_ref)))
+assert err < 1e-4, err
+assert abs(float(aux_ref) - float(aux_ep)) < 1e-5
+print("EP_OK")

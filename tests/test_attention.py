@@ -1,0 +1,109 @@
+"""Attention paths: flash custom_vjp vs dense oracle (fwd+grad), blockwise
+scan-AD reference, ring-buffer local-window decode, hypothesis shapes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import repro.models.attention as A
+
+
+def _qkv(key, b, s, t, kvh, g, hd, dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (b, s, kvh * g, hd), dtype)
+    k = jax.random.normal(ks[1], (b, t, kvh, hd), dtype)
+    v = jax.random.normal(ks[2], (b, t, kvh, hd), dtype)
+    return q, k, v
+
+
+@pytest.mark.parametrize("softcap,window,prefix", [
+    (None, None, 0), (30.0, None, 0), (None, 24, 0), (None, None, 16),
+])
+def test_flash_forward_and_grad_vs_dense(softcap, window, prefix):
+    b, s, kvh, g, hd = 2, 72, 2, 2, 16
+    cfg = A.AttnConfig(d_model=1, n_heads=kvh * g, n_kv_heads=kvh,
+                       head_dim=hd, softcap=softcap, window=window,
+                       prefix_len=prefix)
+    q, k, v = _qkv(jax.random.PRNGKey(0), b, s, s, kvh, g, hd)
+    pos = jnp.arange(s, dtype=jnp.int32)
+    co = jax.random.normal(jax.random.PRNGKey(9), q.shape)
+
+    def loss_flash(q, k, v):
+        return jnp.sum(A._attend_blockwise(q, k, v, cfg, pos, pos, block=24) * co)
+
+    def loss_dense(q, k, v):
+        return jnp.sum(A._attend_dense(q, k, v, cfg, pos, pos) * co)
+
+    o1 = A._attend_blockwise(q, k, v, cfg, pos, pos, block=24)
+    o2 = A._attend_dense(q, k, v, cfg, pos, pos)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                               rtol=1e-4, atol=1e-5)
+    g1 = jax.grad(loss_flash, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(loss_dense, argnums=(0, 1, 2))(q, k, v)
+    for a, b_ in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
+                                   rtol=2e-4, atol=2e-4)
+
+
+def test_blockwise_ref_matches_dense():
+    b, s, kvh, g, hd = 1, 64, 1, 3, 8
+    cfg = A.AttnConfig(d_model=1, n_heads=3, n_kv_heads=1, head_dim=hd)
+    q, k, v = _qkv(jax.random.PRNGKey(2), b, s, s, kvh, g, hd)
+    pos = jnp.arange(s, dtype=jnp.int32)
+    o1 = A._attend_blockwise_ref(q, k, v, cfg, pos, pos, block=16)
+    o2 = A._attend_dense(q, k, v, cfg, pos, pos)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                               rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    s=st.integers(4, 96), kvh=st.sampled_from([1, 2, 4]),
+    group=st.sampled_from([1, 2, 3]), hd=st.sampled_from([8, 16]),
+    block=st.sampled_from([16, 32, 48]), seed=st.integers(0, 1000),
+)
+def test_flash_property_shapes(s, kvh, group, hd, block, seed):
+    """Flash == dense for arbitrary (shape, block) combos incl. ragged
+    final blocks."""
+    cfg = A.AttnConfig(d_model=1, n_heads=kvh * group, n_kv_heads=kvh,
+                       head_dim=hd)
+    q, k, v = _qkv(jax.random.PRNGKey(seed), 1, s, s, kvh, group, hd)
+    pos = jnp.arange(s, dtype=jnp.int32)
+    o1 = A._attend_blockwise(q, k, v, cfg, pos, pos, block=block)
+    o2 = A._attend_dense(q, k, v, cfg, pos, pos)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_decode_matches_full_attention():
+    """Cache decode at position t == row t of full attention."""
+    b, s, kvh, g, hd = 2, 12, 2, 2, 8
+    h = kvh * g
+    cfg = A.AttnConfig(d_model=h * hd, n_heads=h, n_kv_heads=kvh, head_dim=hd)
+    p = A.init_attn(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (b, s, h * hd))
+    pos = jnp.broadcast_to(jnp.arange(s), (b, s))
+    full = A.attention(p, x, cfg, pos)
+    out_p, cache = A.attention_prefill(p, x[:, :-1], cfg, pos[:, :-1],
+                                       max_len=s, cache_dtype=jnp.float32)
+    out_d, _ = A.attention_decode(p, x[:, -1:], cache,
+                                  jnp.asarray(s - 1, jnp.int32), cfg)
+    np.testing.assert_allclose(np.asarray(out_d[:, 0]),
+                               np.asarray(full[:, -1]), rtol=2e-4, atol=1e-5)
+
+
+def test_gqa_head_grouping():
+    """GQA with kvh < h must equal MHA with repeated kv heads."""
+    b, s, kvh, group, hd = 1, 16, 2, 3, 8
+    h = kvh * group
+    cfg = A.AttnConfig(d_model=1, n_heads=h, n_kv_heads=kvh, head_dim=hd)
+    q, k, v = _qkv(jax.random.PRNGKey(5), b, s, s, kvh, group, hd)
+    pos = jnp.arange(s, dtype=jnp.int32)
+    o_gqa = A._attend_dense(q, k, v, cfg, pos, pos)
+    cfg_mha = A.AttnConfig(d_model=1, n_heads=h, n_kv_heads=h, head_dim=hd)
+    k_rep = jnp.repeat(k, group, axis=2)
+    v_rep = jnp.repeat(v, group, axis=2)
+    o_mha = A._attend_dense(q, k_rep, v_rep, cfg_mha, pos, pos)
+    np.testing.assert_allclose(np.asarray(o_gqa), np.asarray(o_mha),
+                               rtol=1e-5, atol=1e-6)

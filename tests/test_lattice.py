@@ -1,0 +1,47 @@
+"""Lattice invariants: weights, opposites, isotropy moments, MRT basis."""
+import numpy as np
+import pytest
+
+from repro.core.lattice import (
+    d2q9, d3q19, d3q19_mrt_collision_matrix, d3q19_mrt_matrix, get_lattice,
+)
+
+
+@pytest.mark.parametrize("lat", [d3q19(), d2q9()])
+def test_weights_and_opposites(lat):
+    assert abs(lat.w.sum() - 1.0) < 1e-14
+    assert (lat.e[lat.opp] == -lat.e).all()
+    assert lat.opp[lat.opp[np.arange(lat.q)]].tolist() == list(range(lat.q))
+
+
+@pytest.mark.parametrize("lat", [d3q19(), d2q9()])
+def test_isotropy_moments(lat):
+    """sum w e = 0;  sum w e_a e_b = cs^2 delta_ab (lattice isotropy)."""
+    w, e = lat.w, lat.e.astype(float)
+    m1 = (w[:, None] * e).sum(axis=0)
+    assert np.allclose(m1, 0.0, atol=1e-14)
+    m2 = np.einsum("q,qa,qb->ab", w, e, e)
+    expect = lat.cs2 * np.eye(3)
+    if lat.d == 2:
+        expect[2, 2] = 0.0
+    assert np.allclose(m2, expect, atol=1e-14)
+
+
+def test_mrt_rows_orthogonal():
+    m = d3q19_mrt_matrix()
+    g = m @ m.T
+    assert np.allclose(g, np.diag(np.diag(g)), atol=1e-9)
+
+
+def test_mrt_equal_rates_reduces_to_lbgk():
+    """With all rates 1/tau, A = (1/tau) I — Eqn (8) collapses to Eqn (2)."""
+    tau = 0.73
+    a = d3q19_mrt_collision_matrix(tau, equal_rates=True)
+    assert np.allclose(a, np.eye(19) / tau, atol=1e-12)
+
+
+def test_get_lattice_names():
+    assert get_lattice("d3q19").q == 19
+    assert get_lattice("D2Q9").q == 9
+    with pytest.raises(ValueError):
+        get_lattice("D3Q27")

@@ -1,0 +1,129 @@
+"""Per-architecture smoke tests: reduced same-family configs, one
+forward/train step on CPU asserting output shapes + finiteness, plus the
+decode-vs-full-forward consistency oracle for every family."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config, get_smoke
+from repro.models.model import CausalLM
+
+
+def _batch(cfg, b, s, key=0, with_labels=True):
+    k = jax.random.PRNGKey(key)
+    if cfg.family == "audio":
+        toks = jax.random.randint(k, (b, s, cfg.num_codebooks), 0, cfg.vocab_size)
+    elif cfg.family == "vlm":
+        toks = jax.random.randint(k, (b, s - cfg.prefix_tokens), 0, cfg.vocab_size)
+    else:
+        toks = jax.random.randint(k, (b, s), 0, cfg.vocab_size)
+    out = {"tokens": toks}
+    if with_labels:
+        out["labels"] = jnp.where(
+            jax.random.uniform(k, toks.shape) < 0.9, toks, -1)
+    if cfg.family == "vlm":
+        out["prefix_embeds"] = jax.random.normal(
+            k, (b, cfg.prefix_tokens, cfg.d_model), jnp.bfloat16)
+    return out
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_loss_grad(arch):
+    cfg = get_smoke(arch)
+    model = CausalLM(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    b, s = 2, 32
+    batch = _batch(cfg, b, s)
+    logits, aux = model.forward(params, batch)
+    if cfg.family == "audio":
+        assert logits.shape == (b, s, cfg.num_codebooks, cfg.vocab_size)
+    else:
+        assert logits.shape == (b, s, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+    loss, metrics = model.loss(params, batch)
+    assert np.isfinite(float(loss))
+    # loss near ln(V) at init (calibrated logits)
+    assert abs(float(loss) - np.log(cfg.vocab_size)) < 1.5
+    grads = jax.grad(lambda p: model.loss(p, batch)[0])(params)
+    gn = np.sqrt(sum(float(jnp.sum(jnp.square(g.astype(jnp.float32))))
+                     for g in jax.tree.leaves(grads)))
+    assert np.isfinite(gn) and gn > 0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_decode_matches_full(arch):
+    """prefill(s) + decode(1) last-token logits == full forward last row.
+
+    MoE smokes bump capacity_factor so GShard capacity DROPS (which depend
+    on how many tokens share the dispatch) don't differ between the 1-token
+    decode and the full forward."""
+    import dataclasses
+    cfg = get_smoke(arch)
+    if cfg.moe is not None:
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+    model = CausalLM(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    b, s, maxlen = 2, 16, 24
+    batch = _batch(cfg, b, s, key=1, with_labels=False)
+    logits_p, cache = model.prefill(params, batch, maxlen,
+                                    cache_dtype=jnp.float32)
+    nxt_shape = (b, 1, cfg.num_codebooks) if cfg.family == "audio" else (b, 1)
+    nxt = jax.random.randint(jax.random.PRNGKey(2), nxt_shape, 0,
+                             cfg.vocab_size)
+    logits_d, _ = model.decode_step(params, nxt, cache,
+                                    jnp.asarray(s if cfg.family != "vlm"
+                                                else s, jnp.int32))
+    full_batch = dict(batch)
+    full_batch["tokens"] = jnp.concatenate([batch["tokens"], nxt], axis=1)
+    full_batch["labels"] = jnp.zeros_like(full_batch["tokens"])
+    full, _ = model.forward(params, full_batch)
+    ref = full[:, -1]
+    err = float(jnp.max(jnp.abs(logits_d[:, 0] - ref)))
+    scale = float(jnp.max(jnp.abs(ref))) + 1e-9
+    assert err / scale < 2e-3, f"{arch}: decode/full mismatch {err/scale}"
+
+
+@pytest.mark.parametrize("arch", ["gemma2-2b"])
+def test_ring_buffer_cache_bounded(arch):
+    """gemma2 local layers keep a ring cache of length window, not max_len."""
+    cfg = get_smoke(arch)
+    model = CausalLM(cfg)
+    cache = model.init_cache(batch=2, max_len=64, dtype=jnp.float32)
+    assert cache["local"]["k"].shape[2] == cfg.local_window
+    assert cache["global"]["k"].shape[2] == 64
+
+
+def test_full_configs_match_published_dims():
+    """The FULL configs carry the exact published dimensions (spot checks)."""
+    c = get_config("qwen1.5-32b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.d_ff, c.vocab_size) == \
+        (64, 5120, 40, 27392, 152064)
+    c = get_config("gemma2-2b")
+    assert c.head_dim == 256 and c.attn_softcap == 50.0 and c.local_window == 4096
+    c = get_config("deepseek-moe-16b")
+    assert c.moe.n_experts == 64 and c.moe.top_k == 6 and c.moe.n_shared == 2
+    c = get_config("zamba2-2.7b")
+    assert c.n_layers == 54 and c.ssm.d_state == 64 and c.attn_every == 6
+    c = get_config("rwkv6-3b")
+    assert c.d_model == 2560 and c.vocab_size == 65536
+
+
+def test_param_counts_near_nameplate():
+    """Exact (eval_shape) counts land near the expected sizes for the
+    ASSIGNED dims.  NOTE: moonshot as assigned (48L x 64e x 1408) is 28.4B
+    total — larger than the "16b" name; we implement the assigned config."""
+    from repro.configs import param_stats
+    total, active = param_stats(get_config("deepseek-moe-16b"))
+    assert 14e9 < total < 20e9 and 2e9 < active < 4.5e9
+    total, active = param_stats(get_config("starcoder2-3b"))
+    assert 2.5e9 < total < 3.6e9
+    total, active = param_stats(get_config("qwen1.5-32b"))
+    assert 30e9 < total < 37e9
+    total, active = param_stats(get_config("moonshot-v1-16b-a3b"))
+    assert 25e9 < total < 31e9 and 3.5e9 < active < 5.5e9
+    total, active = param_stats(get_config("rwkv6-3b"))
+    assert 2.7e9 < total < 3.4e9
+    total, active = param_stats(get_config("zamba2-2.7b"))
+    assert 2.1e9 < total < 2.9e9 and active > total  # shared-block reuse

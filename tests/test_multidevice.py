@@ -1,0 +1,37 @@
+"""Multi-device integration tests.
+
+Each runs in a SUBPROCESS with XLA_FLAGS=--xla_force_host_platform_device_count=8
+so the rest of the suite keeps seeing the real single device (task spec:
+never set the flag globally).
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+PROGS = os.path.join(os.path.dirname(__file__), "progs")
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _run(prog, marker, timeout=900):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run(
+        [sys.executable, os.path.join(PROGS, prog)],
+        capture_output=True, text=True, timeout=timeout, env=env)
+    assert out.returncode == 0, f"{prog}:\n{out.stdout}\n{out.stderr[-3000:]}"
+    assert marker in out.stdout
+
+
+def test_ep_moe_matches_global():
+    _run("ep_moe.py", "EP_OK")
+
+
+def test_sharded_lbm_matches_single_device():
+    _run("sharded_lbm.py", "SHARDED_OK")
+
+
+def test_mini_dryrun_all_families():
+    _run("smoke_dryrun.py", "DRYRUN_SMOKE_OK", timeout=1500)

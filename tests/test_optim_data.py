@@ -1,0 +1,141 @@
+"""AdamW numerics + schedules + data pipeline properties + compression."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data.tokens import DataConfig, make_batch
+from repro.dist.compress import Compressor
+from repro.dist.ft import StepWatchdog, elastic_plan
+from repro.optim.adamw import AdamWConfig, apply_updates, init_state, schedule_lr
+
+
+def test_adamw_converges_quadratic():
+    """AdamW minimises ||x - c||^2 quickly."""
+    c = jnp.asarray([1.5, -2.0, 0.5])
+    params = {"x": jnp.zeros(3)}
+    state = init_state(params)
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.0, warmup_steps=1,
+                      total_steps=200, schedule="constant")
+    for step in range(200):
+        g = {"x": 2 * (params["x"] - c)}
+        params, state, _ = apply_updates(params, state, g, cfg,
+                                         jnp.asarray(step))
+    assert float(jnp.max(jnp.abs(params["x"] - c))) < 1e-2
+
+
+def test_gradient_clipping():
+    params = {"x": jnp.zeros(4)}
+    state = init_state(params)
+    cfg = AdamWConfig(lr=0.0, clip_norm=1.0)
+    g = {"x": 100.0 * jnp.ones(4)}
+    _, _, m = apply_updates(params, state, g, cfg, jnp.asarray(0))
+    assert float(m["grad_norm"]) == pytest.approx(200.0)
+
+
+def test_schedule_shapes():
+    cfg = AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                      schedule="cosine", min_lr_ratio=0.1)
+    lrs = [float(schedule_lr(cfg, jnp.asarray(s))) for s in range(100)]
+    assert lrs[0] < lrs[9] <= 1.0           # warmup
+    assert lrs[99] == pytest.approx(0.1, rel=1e-2)
+    assert max(lrs) <= 1.0
+
+
+def test_weight_decay_mask():
+    """Norm/scale/bias leaves get no decay."""
+    params = {"mlp": {"up": jnp.ones((2, 2))}, "norm_attn": jnp.ones(2)}
+    state = init_state(params)
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.5, clip_norm=None,
+                      warmup_steps=1, schedule="constant")
+    zero_g = jax.tree.map(jnp.zeros_like, params)
+    new, _, _ = apply_updates(params, state, zero_g, cfg, jnp.asarray(10))
+    assert float(new["mlp"]["up"][0, 0]) < 1.0        # decayed
+    assert float(new["norm_attn"][0]) == 1.0          # not decayed
+
+
+# ---------------------------------------------------------------- data
+def test_data_deterministic_and_shards_disjoint():
+    cfg = DataConfig(vocab_size=211, seq_len=64, global_batch=8, seed=3)
+    b1 = make_batch(cfg, step=5, shard=0, num_shards=2)
+    b1_again = make_batch(cfg, step=5, shard=0, num_shards=2)
+    b2 = make_batch(cfg, step=5, shard=1, num_shards=2)
+    np.testing.assert_array_equal(b1["tokens"], b1_again["tokens"])
+    assert not np.array_equal(b1["tokens"], b2["tokens"])
+    assert b1["tokens"].shape == (4, 64)
+    # labels are next-token shifted
+    np.testing.assert_array_equal(b1["labels"][:, :-1], b1["tokens"][:, 1:])
+    assert (b1["labels"][:, -1] == -1).all()
+
+
+def test_data_learnable_structure():
+    """The stream is compressible, not uniform noise: every segment is a
+    tiled short motif, a copy, or an affine recurrence — verify at least
+    one structure explains each of the first few segments."""
+    cfg = DataConfig(vocab_size=997, seq_len=256, global_batch=2, seed=0,
+                     copy_prob=0.0, segment_len=64)
+    b = make_batch(cfg, 0)
+    toks = b["tokens"][0].astype(np.int64)
+    explained = 0
+    for s0 in range(0, 192, 64):
+        seg = toks[s0:s0 + 64]
+        ok = False
+        for p in range(2, 9):               # tiled motif?
+            if (seg[p:] == seg[:-p]).all():
+                ok = True
+                break
+        if not ok:                           # affine recurrence?
+            for a in range(1, 128, 2):
+                bb = (seg[1] - a * seg[0]) % 997
+                if ((a * seg[:-1] + bb) % 997 == seg[1:]).all():
+                    ok = True
+                    break
+        explained += ok
+    assert explained >= 2
+
+
+# ---------------------------------------------------------------- compression
+@pytest.mark.parametrize("kind", ["int8", "topk"])
+def test_compression_error_feedback_preserves_signal(kind):
+    """With error feedback, the ACCUMULATED decompressed signal tracks the
+    accumulated true gradient (bounded residual — the EF guarantee)."""
+    comp = Compressor(kind, topk_frac=0.25)
+    rng = np.random.default_rng(0)
+    g_true = {"w": jnp.asarray(rng.standard_normal((32, 32)), jnp.float32)}
+    ef = comp.init(g_true)
+    acc_true = np.zeros((32, 32))
+    acc_dec = np.zeros((32, 32))
+    for _ in range(20):
+        dec, ef = comp.encode_decode(g_true, ef)
+        acc_true += np.asarray(g_true["w"])
+        acc_dec += np.asarray(dec["w"])
+    # residual bounded by one step's error, not growing
+    resid = np.abs(acc_true - acc_dec).max()
+    one_step = np.abs(np.asarray(g_true["w"])).max()
+    assert resid <= one_step * 1.5
+
+
+def test_int8_quantisation_accuracy():
+    comp = Compressor("int8")
+    g = {"w": jnp.linspace(-3, 3, 1000)}
+    dec, _ = comp.encode_decode(g, comp.init(g))
+    assert float(jnp.max(jnp.abs(dec["w"] - g["w"]))) < 3 / 127 + 1e-6
+    assert comp.traffic_ratio() == 0.25
+
+
+# ---------------------------------------------------------------- ft
+def test_watchdog_flags_stragglers():
+    wd = StepWatchdog(window=10, threshold=2.0)
+    for s in range(10):
+        assert not wd.observe(s, 1.0).is_straggler
+    rep = wd.observe(10, 3.0)
+    assert rep.is_straggler and rep.ratio == pytest.approx(3.0)
+    assert not wd.observe(11, 1.1).is_straggler
+
+
+def test_elastic_plan():
+    p = elastic_plan(old_dp=16, new_dp=8, global_batch=256, step=100)
+    assert p.batch_per_shard == 32
+    with pytest.raises(AssertionError):
+        elastic_plan(old_dp=16, new_dp=7, global_batch=256, step=0)

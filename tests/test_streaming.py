@@ -1,0 +1,46 @@
+"""Streaming gather tables: permutation property, bounce/cross accounting."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.lattice import d3q19
+from repro.core.streaming import build_stream_tables
+from repro.core.tiling import SOLID, tile_geometry
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), p=st.floats(0.3, 1.0))
+def test_every_value_read_at_most_once_per_direction(seed, p):
+    """Pull streaming reads each (direction, node) source slot at most once
+    per direction — the Eqn (10) minimum traffic property.  (Bounce-back
+    self-pulls may duplicate reads of the opposite direction; within one
+    direction's pull the map must be injective on non-bounced links.)"""
+    rng = np.random.default_rng(seed)
+    g = (rng.random((8, 8, 8)) < p).astype(np.uint8)
+    if (g != SOLID).sum() == 0:
+        return
+    t = tile_geometry(g, a=4)
+    lat = d3q19()
+    tables = build_stream_tables(t, lat, "paper")
+    m = t.num_tiles * 64
+    for q in range(lat.q):
+        idx = tables.gather_idx[q].reshape(-1)
+        same_dir = idx[(idx >= q * m) & (idx < (q + 1) * m)]
+        assert len(np.unique(same_dir)) == len(same_dir)
+
+
+def test_fully_fluid_box_has_no_internal_bounce():
+    g = np.ones((8, 8, 8), np.uint8)
+    t = tile_geometry(g, a=4)
+    lat = d3q19()
+    tb = build_stream_tables(t, lat, "xyz", periodic=(True, True, True))
+    assert tb.bounce_frac == 0.0
+    assert tb.cross_tile_frac > 0.0   # neighbour-tile pulls exist
+
+
+def test_rest_direction_is_identity():
+    g = np.ones((4, 4, 4), np.uint8)
+    t = tile_geometry(g, a=4)
+    lat = d3q19()
+    tb = build_stream_tables(t, lat, "xyz")
+    assert (tb.gather_idx[0].reshape(-1) == np.arange(64)).all()

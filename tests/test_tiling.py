@@ -1,0 +1,81 @@
+"""Tiler (Algorithm 1) + utilisation model (Eqns 14-16) + channel studies."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.overhead import channel_tile_utilisations
+from repro.core.tiling import SOLID, FLUID, tile_field, tile_geometry, untile
+
+
+def random_geometry(rng, shape, p_fluid):
+    return (rng.random(shape) < p_fluid).astype(np.uint8)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    nx=st.integers(3, 17), ny=st.integers(3, 17), nz=st.integers(3, 17),
+    p=st.floats(0.05, 0.95), seed=st.integers(0, 2**31 - 1),
+)
+def test_tiling_partition_property(nx, ny, nz, p, seed):
+    """Every non-solid node lands in exactly one tile slot; tiles with no
+    fluid are dropped; total fluid count preserved (Algorithm 1)."""
+    rng = np.random.default_rng(seed)
+    g = random_geometry(rng, (nx, ny, nz), p)
+    t = tile_geometry(g, a=4)
+    assert t.n_fluid_nodes == int((g != SOLID).sum())
+    # every non-empty tile has >= 1 fluid node
+    assert ((t.node_types != SOLID).sum(axis=1) >= 1).all()
+    # tile_map consistency
+    for i, (x, y, z) in enumerate(t.tile_coords):
+        assert t.tile_map[x, y, z] == i
+    assert (t.tile_map >= 0).sum() == t.num_tiles
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_tile_untile_roundtrip(seed):
+    rng = np.random.default_rng(seed)
+    g = random_geometry(rng, (9, 7, 11), 0.5)
+    t = tile_geometry(g, a=4)
+    dense = rng.random((9, 7, 11))
+    vals = tile_field(t, dense)
+    back = untile(t, vals, fill=np.nan)
+    fluid = np.zeros(t.shape, bool)
+    fluid[:9, :7, :11] = g != SOLID
+    assert np.allclose(back[fluid], np.pad(
+        dense, [(0, t.shape[i] - dense.shape[i]) for i in range(3)])[fluid])
+
+
+def test_overhead_formulas():
+    """Eqn 15/16 at known utilisation."""
+    g = np.zeros((8, 8, 8), np.uint8)
+    g[:4, :4, :4] = FLUID          # exactly one full tile
+    t = tile_geometry(g, a=4)
+    assert t.num_tiles == 1 and t.tile_utilisation == 1.0
+    assert t.overhead_generic() == 0.0
+    # memory overhead ~ (2 - eta)/eta with eta=1 -> ~1 (two copies of f)
+    assert abs(t.overhead_memory(n_t=0) - 1.0) < 1e-12
+
+
+def test_channel_utilisation_perfect_fit():
+    """A 4x4 square channel admits a tiling with eta_t = 1 (paper §3.3)."""
+    etas = channel_tile_utilisations("square", 4, a=4)
+    assert etas.max() == 1.0
+
+
+def test_channel_utilisation_period():
+    """Fig 8: only a few discrete utilisation values exist per size; the
+    8x8 channel has exactly 3 distinct tilings' values (paper Fig 9)."""
+    etas = channel_tile_utilisations("square", 8, a=4)
+    assert len(np.unique(np.round(etas, 6))) == 3
+    # paper Fig 9: values 1.0, ~0.67, ~0.44; mean ~0.56
+    assert abs(np.mean(etas) - 0.56) < 0.02
+
+
+def test_channel_utilisation_grows_with_size():
+    small = channel_tile_utilisations("square", 12, a=4).mean()
+    big = channel_tile_utilisations("square", 100, a=4).mean()
+    assert big > 0.9 and big > small
+    # circle channels: average above 0.8 by diameter 30 (paper §3.3)
+    circ = channel_tile_utilisations("circle", 30, a=4).mean()
+    assert circ > 0.78
