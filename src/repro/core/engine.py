@@ -7,8 +7,8 @@ purity + buffer donation (the paper's explicit f / f' pair).
 
 The same engine runs:
 * on CPU for validation/benchmarks (this container),
-* distributed via ``repro.dist.lbm_sharded`` (slab decomposition of the tile
-  grid — the multi-GPU extension the paper leaves as future work),
+* distributed via ``repro.dist.lbm.ShardedLBM`` (slab decomposition of the
+  tile grid — the multi-GPU extension the paper leaves as future work),
 * with the Pallas collision kernel (``repro.kernels``) swapped in for the
   pure-jnp collision via ``use_kernel=True``.
 """

@@ -24,6 +24,13 @@ def cavity3d(b: int) -> np.ndarray:
     return g
 
 
+def _open_z_ends(inner: np.ndarray) -> None:
+    """Mark fluid nodes on the first/last z plane as INLET/OUTLET (in place)."""
+    inner[:, :, 0] = np.where(inner[:, :, 0] == FLUID, INLET, inner[:, :, 0])
+    inner[:, :, -1] = np.where(inner[:, :, -1] == FLUID, OUTLET,
+                               inner[:, :, -1])
+
+
 def duct(nx: int, ny: int, nz: int, open_ends: bool = True) -> np.ndarray:
     """Rectangular duct along z: solid side walls, inlet at z=0, outlet z=-1."""
     g = np.full((nx, ny, nz), FLUID, dtype=np.uint8)
@@ -32,10 +39,21 @@ def duct(nx: int, ny: int, nz: int, open_ends: bool = True) -> np.ndarray:
     g[:, 0, :] = SOLID
     g[:, -1, :] = SOLID
     if open_ends:
-        inner = g[1:-1, 1:-1, :]
-        inner[:, :, 0] = np.where(inner[:, :, 0] == FLUID, INLET, inner[:, :, 0])
-        inner[:, :, -1] = np.where(inner[:, :, -1] == FLUID, OUTLET, inner[:, :, -1])
+        _open_z_ends(g[1:-1, 1:-1, :])
     return g
+
+
+def duct_wrap(g: np.ndarray, wall: int = 1) -> np.ndarray:
+    """Wrap a porous block in a solid duct: ``wall`` solid layers on the
+    x/y faces, and open z faces (fluid nodes on the first/last z plane
+    become INLET/OUTLET).  Turns e.g. ``random_spheres`` output into a
+    well-posed flow-through case instead of a wall-less periodic box."""
+    assert wall >= 1, "duct_wrap needs at least one wall layer"
+    nx, ny, nz = g.shape
+    out = np.full((nx + 2 * wall, ny + 2 * wall, nz), SOLID, dtype=np.uint8)
+    out[wall:-wall, wall:-wall, :] = g
+    _open_z_ends(out[wall:-wall, wall:-wall, :])
+    return out
 
 
 def channel2d(nx: int, ny: int) -> np.ndarray:

@@ -1,0 +1,15 @@
+"""Distributed layer: slab-decomposed LBM, LM sharding rules, gradient
+compression and fault-tolerance shims.
+
+Modules
+-------
+* ``lbm``      — :class:`ShardedLBM`, the slab decomposition of the sparse
+  tile mesh over a device mesh axis (the multi-GPU extension the paper
+  leaves as future work).
+* ``sharding`` — named-axis sharding rules for the LM stack (DP/FSDP over
+  ``("pod", "data")``, TP/EP/SP over ``"model"``).
+* ``compress`` — gradient compression (fp16 / int8 / top-k) with error
+  feedback.
+* ``ft``       — fault tolerance: preemption handling, step watchdog,
+  elastic re-planning.
+"""

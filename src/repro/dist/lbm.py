@@ -1,0 +1,456 @@
+"""Slab-decomposed multi-device LBM — the paper's sparse tiled engine
+scaled over a device mesh axis.
+
+The tiler orders ``Tiling.tile_coords`` z-major precisely so that
+contiguous runs of z tile-layers form slabs.  :func:`make_slab_plan` cuts
+the tile-layer axis into ``n_dev`` contiguous slabs balanced by fluid-node
+count; each device gets its OWN tile layers plus one replicated HALO
+tile-layer per cut face (streaming reaches one node, so one a-thick tile
+layer per side is enough for any number of steps between exchanges = 1).
+
+Per device the slab is just another sparse tiled problem: the slab
+geometry is re-tiled with the host tiler and gets its own streaming tables,
+so cross-slab links resolve into the local halo tiles with zero special
+cases.  One LBM iteration under ``shard_map`` is then
+
+    1. halo exchange — ``jax.lax.ppermute`` of the boundary tile layers
+       (the paper's future-work multi-GPU extension; ISSUE: fused into the
+       per-step update, not a separate host phase),
+    2. the unchanged fused step: gather-streaming + open-boundary
+       reconstruction + collision + solid masking.
+
+Owned-tile results are bitwise-reproducible vs the single-device
+``SparseTiledLBM`` (the update is elementwise given identical inputs); the
+parity prog ``tests/progs/sharded_lbm.py`` pins this to 1e-12 in float64.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import collision as col
+from repro.core.engine import LBMConfig
+from repro.core.boundary import apply_open_boundary
+from repro.core.lattice import get_lattice
+from repro.core.streaming import build_stream_tables
+from repro.core.tiling import SOLID, Tiling, tile_geometry
+
+
+# ==========================================================================
+# host-side slab plan
+# ==========================================================================
+def balanced_layer_partition(weights: np.ndarray, n_dev: int):
+    """Cut ``len(weights)`` layers into ``n_dev`` contiguous slabs whose
+    weight sums are as equal as the layer granularity allows.
+
+    Every slab gets at least one layer.  Returns [(zl, zh), ...) half-open.
+    """
+    tz = len(weights)
+    assert tz >= n_dev, f"{tz} tile layers cannot feed {n_dev} slabs"
+    cum = np.cumsum(np.asarray(weights, np.float64))
+    total = cum[-1]
+    bounds = [0]
+    for d in range(1, n_dev):
+        target = total * d / n_dev
+        k = int(np.argmin(np.abs(cum - target)))     # closest cut point
+        z = max(k + 1, bounds[-1] + 1)               # >= 1 layer each
+        z = min(z, tz - (n_dev - d))                 # leave layers behind
+        bounds.append(z)
+    bounds.append(tz)
+    return [(bounds[d], bounds[d + 1]) for d in range(n_dev)]
+
+
+def _tiles_at_layer(t: Tiling, layer: int) -> np.ndarray:
+    """Local tile ids of one z tile-layer (z-major order => (y, x) sorted,
+    identical on every device that holds the layer)."""
+    return np.nonzero(t.tile_coords[:, 2] == layer)[0].astype(np.int32)
+
+
+@dataclasses.dataclass
+class SlabPlan:
+    """Host-side slab decomposition of the tile grid along z."""
+
+    n_dev: int
+    a: int
+    tile_layers: int                       # TZ of the global tile grid
+    layer_of_dev: list                     # [(zl, zh)) owned tile layers
+    own_z0: list                           # local layer index of first owned
+    local_tilings: list                    # per-device Tiling (own + halo)
+    own: np.ndarray                        # (D, t_pad) owned-tile mask
+    t_max: int                             # max local tile count
+    t_pad: int                             # t_max + 1 (last slot = dummy)
+    n_fluid_own: int                       # owned non-solid nodes (global)
+    periodic_z: bool
+
+    @property
+    def nodes_per_tile(self) -> int:
+        return self.a ** 3
+
+    def owned_layer_range_local(self, d: int):
+        """Local tile-layer index range [lo, hi) of device d's OWNED tiles."""
+        zl, zh = self.layer_of_dev[d]
+        return self.own_z0[d], self.own_z0[d] + (zh - zl)
+
+    def halo_layers_local(self, d: int):
+        """Local tile-layer indices of the halo (0, 1, or 2 entries)."""
+        lo, hi = self.owned_layer_range_local(d)
+        out = []
+        if lo > 0:
+            out.append(0)
+        tz_local = self.local_tilings[d].tile_grid[2]
+        if hi < tz_local:
+            out.append(hi)
+        return out
+
+
+def make_slab_plan(node_type: np.ndarray, a: int, n_dev: int,
+                   periodic_z: bool = False) -> SlabPlan:
+    """Slab-decompose a dense geometry into ``n_dev`` z slabs of tiles."""
+    node_type = np.ascontiguousarray(node_type.astype(np.uint8))
+    g_tiling = tile_geometry(node_type, a)
+    tz = g_tiling.tile_grid[2]
+    wrap = periodic_z and n_dev > 1
+    if wrap:
+        assert tz >= 2 * n_dev, (
+            f"periodic z needs >= 2 tile layers per slab ({tz} vs {n_dev})")
+
+    # balance on fluid nodes per tile layer (tiles can be nearly empty)
+    fluid_per_tile = (g_tiling.node_types != SOLID).sum(axis=1)
+    weights = np.bincount(g_tiling.tile_coords[:, 2],
+                          weights=fluid_per_tile, minlength=tz)
+    layer_of_dev = balanced_layer_partition(weights, n_dev)
+
+    if wrap:
+        # wrapped slices need the z-padded dense geometry
+        pad_z = (-node_type.shape[2]) % a
+        padded = np.pad(node_type, ((0, 0), (0, 0), (0, pad_z)),
+                        constant_values=SOLID) if pad_z else node_type
+
+    local_tilings, own_z0 = [], []
+    for d, (zl, zh) in enumerate(layer_of_dev):
+        if wrap:
+            layers = [(zl - 1) % tz] + list(range(zl, zh)) + [zh % tz]
+            sub = np.concatenate(
+                [padded[:, :, l * a:(l + 1) * a] for l in layers], axis=2)
+            z0 = 1
+        else:
+            g_lo, g_hi = max(0, zl - 1), min(tz, zh + 1)
+            sub = node_type[:, :, g_lo * a: g_hi * a]
+            if sub.shape[2] < (g_hi - g_lo) * a:       # orig z not % a
+                sub = np.pad(
+                    sub, ((0, 0), (0, 0),
+                          (0, (g_hi - g_lo) * a - sub.shape[2])),
+                    constant_values=SOLID)
+            z0 = zl - g_lo
+        local_tilings.append(tile_geometry(sub, a))
+        own_z0.append(z0)
+
+    t_max = max(t.num_tiles for t in local_tilings)
+    t_pad = t_max + 1
+    own = np.zeros((n_dev, t_pad), bool)
+    n_fluid_own = 0
+    for d, lt in enumerate(local_tilings):
+        lo = own_z0[d]
+        hi = lo + (layer_of_dev[d][1] - layer_of_dev[d][0])
+        zc = lt.tile_coords[:, 2]
+        own[d, :lt.num_tiles] = (zc >= lo) & (zc < hi)
+        n_fluid_own += int(
+            (lt.node_types[own[d, :lt.num_tiles]] != SOLID).sum())
+    assert n_fluid_own == g_tiling.n_fluid_nodes, (
+        n_fluid_own, g_tiling.n_fluid_nodes)
+
+    return SlabPlan(n_dev=n_dev, a=a, tile_layers=tz,
+                    layer_of_dev=layer_of_dev, own_z0=own_z0,
+                    local_tilings=local_tilings, own=own,
+                    t_max=t_max, t_pad=t_pad, n_fluid_own=n_fluid_own,
+                    periodic_z=bool(periodic_z))
+
+
+# ==========================================================================
+# device-side engine
+# ==========================================================================
+class ShardedLBM:
+    """Slab-decomposed ``SparseTiledLBM`` over one (or more) mesh axes.
+
+    ``axis`` names the mesh axes whose product forms the slab axis (default
+    ``("data",)``; the dry-run passes ``("pod", "data")`` for 32 slabs on
+    the multi-pod mesh).  Remaining mesh axes are replicated.
+    """
+
+    def __init__(self, node_type: np.ndarray, cfg: LBMConfig, mesh,
+                 axis=("data",), dryrun: bool = False):
+        if isinstance(axis, str):
+            axis = (axis,)
+        self.cfg = cfg
+        self.lat = get_lattice(cfg.lattice)
+        self.dtype = jnp.dtype(cfg.dtype)
+        self.dryrun = dryrun
+
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        n_slab = math.prod(sizes[a] for a in axis)
+        names = mesh.axis_names
+        order = tuple(axis) + tuple(a for a in names if a not in axis)
+        devs = np.transpose(mesh.devices,
+                            [names.index(a) for a in order])
+        self.mesh = Mesh(devs.reshape(n_slab, -1), ("slab", "repl"))
+
+        self.plan = make_slab_plan(node_type, cfg.a, n_slab,
+                                   periodic_z=cfg.periodic[2])
+        self._build_tables()
+        self._build_step()
+        self.f = None
+        if not dryrun:
+            self._tbl = {
+                k: jax.device_put(v, NamedSharding(self.mesh,
+                                                   self._tbl_specs[k]))
+                for k, v in self._tbl_np.items()}
+            self.f = jax.device_put(self._initial_state(), self._f_sharding)
+        self._multi_cache: dict[int, callable] = {}
+
+    # ------------------------------------------------------------- tables
+    def _build_tables(self) -> None:
+        cfg, lat, plan = self.cfg, self.lat, self.plan
+        q, tp, n = lat.q, plan.t_pad, plan.nodes_per_tile
+        d_cnt = plan.n_dev
+        wrap = plan.periodic_z and d_cnt > 1
+        # periodic z is carried by the wrapped halo when sharded; a single
+        # slab keeps the engine's in-table wrap
+        local_pz = cfg.periodic[2] and d_cnt == 1
+        periodic = (cfg.periodic[0], cfg.periodic[1], local_pz)
+
+        gather = np.empty((d_cnt, q, tp, n), np.int32)
+        solid = np.ones((d_cnt, tp, n), bool)
+        types = np.zeros((d_cnt, tp, n), np.uint8)
+        self._perms = None
+        for d, lt in enumerate(plan.local_tilings):
+            tabs = build_stream_tables(lt, lat, cfg.layout_scheme, periodic)
+            if self._perms is None:     # layout perms are device-independent
+                self._perms = tabs.perms
+                self._inv_perms = tabs.inv_perms
+            t_loc = lt.num_tiles
+            g = tabs.gather_idx.astype(np.int64)
+            m_loc, m_pad = t_loc * n, tp * n
+            gather[d, :, :t_loc] = (g // m_loc) * m_pad + g % m_loc
+            # padding tiles (incl. the dummy slot) read themselves
+            qi = np.arange(q)[:, None, None]
+            ti = np.arange(t_loc, tp)[None, :, None]
+            oi = np.arange(n)[None, None, :]
+            gather[d, :, t_loc:] = qi * m_pad + ti * n + oi
+            solid[d, :t_loc] = lt.node_types == SOLID
+            types[d, :t_loc] = lt.node_types
+
+        bc = None
+        if cfg.boundaries:
+            bc = np.stack([types == tv for tv, _ in cfg.boundaries])
+        own_nodes = plan.own[:, :, None] & ~solid
+
+        tbl = {"gather": gather, "solid": solid, "own_nodes": own_nodes}
+        specs = {"gather": P("slab", None, None, None),
+                 "solid": P("slab", None, None),
+                 "own_nodes": P("slab", None, None)}
+        if bc is not None:
+            tbl["bc"] = bc
+            specs["bc"] = P(None, "slab", None, None)
+
+        if d_cnt > 1:
+            up_send = [_tiles_at_layer(lt, plan.owned_layer_range_local(d)[1] - 1)
+                       for d, lt in enumerate(plan.local_tilings)]
+            dn_send = [_tiles_at_layer(lt, plan.owned_layer_range_local(d)[0])
+                       for d, lt in enumerate(plan.local_tilings)]
+            self._perm_up = [(d, (d + 1) % d_cnt) for d in range(d_cnt)
+                             if wrap or d + 1 < d_cnt]
+            self._perm_dn = [(d, (d - 1) % d_cnt) for d in range(d_cnt)
+                             if wrap or d > 0]
+            h = max(1, max(len(s) for s in up_send + dn_send))
+            dummy = tp - 1
+
+            def pack(lists):
+                out = np.full((d_cnt, h), dummy, np.int32)
+                for d, ids in enumerate(lists):
+                    out[d, :len(ids)] = ids
+                return out
+
+            ru = np.full((d_cnt, h), dummy, np.int32)
+            rum = np.zeros((d_cnt, h), bool)
+            rd = np.full((d_cnt, h), dummy, np.int32)
+            rdm = np.zeros((d_cnt, h), bool)
+            for d in range(d_cnt):
+                lo, hi = self.plan.owned_layer_range_local(d)
+                if lo > 0:          # bottom halo <- previous device's top
+                    prev = (d - 1) % d_cnt
+                    ids = _tiles_at_layer(plan.local_tilings[d], 0)
+                    assert len(ids) == len(up_send[prev]), (d, "up")
+                    ru[d, :len(ids)] = ids
+                    rum[d, :len(ids)] = True
+                tz_local = plan.local_tilings[d].tile_grid[2]
+                if hi < tz_local:   # top halo <- next device's bottom
+                    nxt = (d + 1) % d_cnt
+                    ids = _tiles_at_layer(plan.local_tilings[d], hi)
+                    assert len(ids) == len(dn_send[nxt]), (d, "down")
+                    rd[d, :len(ids)] = ids
+                    rdm[d, :len(ids)] = True
+            tbl.update(su=pack(up_send), sd=pack(dn_send),
+                       ru=ru, rum=rum, rd=rd, rdm=rdm)
+            specs.update({k: P("slab", None)
+                          for k in ("su", "sd", "ru", "rum", "rd", "rdm")})
+
+        self._tbl_np = tbl
+        self._tbl_specs = specs
+        self._types_np = types
+        self._f_spec = P("slab", None, None, None)
+        self._f_sharding = NamedSharding(self.mesh, self._f_spec)
+        self._f_shape = (d_cnt, q, tp, n)
+
+    # --------------------------------------------------------------- state
+    def _to_storage(self, f_canon):
+        """(..., Q, T, n) canonical -> per-direction storage layout."""
+        if self.cfg.layout_scheme == "xyz":
+            return f_canon
+        q_axis = f_canon.ndim - 3
+        return jnp.stack(
+            [jnp.take(f_canon, qq, axis=q_axis)[..., self._inv_perms[qq]]
+             for qq in range(self.lat.q)], axis=q_axis)
+
+    def _to_canonical(self, f_store):
+        if self.cfg.layout_scheme == "xyz":
+            return f_store
+        q_axis = f_store.ndim - 3
+        return jnp.stack(
+            [jnp.take(f_store, qq, axis=q_axis)[..., self._perms[qq]]
+             for qq in range(self.lat.q)], axis=q_axis)
+
+    def _initial_state(self):
+        d_cnt, q, tp, n = self._f_shape
+        rho = jnp.full((d_cnt, tp, n), self.cfg.rho0, self.dtype)
+        u = jnp.broadcast_to(
+            jnp.asarray(self.cfg.u0, self.dtype)[:, None, None, None],
+            (3, d_cnt, tp, n))
+        feq = col.equilibrium(rho, u, self.lat, self.cfg.collision.fluid)
+        feq = jnp.where(jnp.asarray(self._tbl_np["solid"])[None], 0.0, feq)
+        return self._to_storage(jnp.moveaxis(feq, 0, 1))  # (D, Q, Tp, n)
+
+    # ---------------------------------------------------------------- step
+    def _collide(self, f_in, solid):
+        if self.cfg.use_kernel:
+            from repro.kernels import ops as kops
+
+            return kops.collide_tiles(
+                f_in, solid, self.lat, self.cfg.collision,
+                force=self.cfg.force, interpret=self.cfg.kernel_interpret)
+        f_out, _, _ = col.collide(f_in, self.lat, self.cfg.collision,
+                                  self.cfg.force)
+        return f_out
+
+    def _build_step(self) -> None:
+        cfg, lat = self.cfg, self.lat
+        d_cnt, q, tp, n = (self.plan.n_dev, self.lat.q, self.plan.t_pad,
+                           self.plan.nodes_per_tile)
+
+        def body(f, tbl):
+            f = f[0]                                      # (Q, Tp, n)
+            if d_cnt > 1:
+                # halo exchange: boundary tile layers travel one hop along
+                # the slab axis; padding slots land in the dummy tile
+                up = jax.lax.ppermute(f[:, tbl["su"][0]], "slab",
+                                      self._perm_up)
+                dn = jax.lax.ppermute(f[:, tbl["sd"][0]], "slab",
+                                      self._perm_dn)
+                ru, rum = tbl["ru"][0], tbl["rum"][0]
+                rd, rdm = tbl["rd"][0], tbl["rdm"][0]
+                f = f.at[:, ru].set(
+                    jnp.where(rum[None, :, None], up, f[:, ru]))
+                f = f.at[:, rd].set(
+                    jnp.where(rdm[None, :, None], dn, f[:, rd]))
+            if cfg.kernel_mode == "rw_only":
+                return (f + 0.0)[None]
+            f_in = jnp.take(f.reshape(-1), tbl["gather"][0].reshape(-1),
+                            axis=0).reshape(q, tp, n)
+            if cfg.kernel_mode == "propagation_only":
+                return self._to_storage(f_in)[None]
+            for i, (_, spec) in enumerate(cfg.boundaries):
+                f_in = apply_open_boundary(f_in, tbl["bc"][i][0], spec, lat)
+            solid = tbl["solid"][0]
+            f_out = self._collide(f_in, solid)
+            f_out = jnp.where(solid[None], 0.0, f_out)
+            return self._to_storage(f_out)[None]
+
+        step_specs = {k: v for k, v in self._tbl_specs.items()}
+
+        def raw_step(f, tbl):
+            return shard_map(
+                body, mesh=self.mesh,
+                in_specs=(self._f_spec, step_specs),
+                out_specs=self._f_spec, check_rep=False)(f, tbl)
+
+        self._raw_step = raw_step
+        self._step_fn = jax.jit(raw_step, donate_argnums=0)
+
+    def step(self, steps: int = 1) -> None:
+        for _ in range(steps):
+            self.f = self._step_fn(self.f, self._tbl)
+
+    def run(self, steps: int) -> None:
+        """``steps`` iterations inside one jitted fori_loop."""
+        if steps not in self._multi_cache:
+            self._multi_cache[steps] = jax.jit(
+                lambda f, tbl: jax.lax.fori_loop(
+                    0, steps, lambda i, x: self._raw_step(x, tbl), f),
+                donate_argnums=0)
+        self.f = self._multi_cache[steps](self.f, self._tbl)
+
+    def lower_step(self):
+        """Lower one step on abstract operands (dry-run: nothing allocated)."""
+        f_sds = jax.ShapeDtypeStruct(self._f_shape, self.dtype,
+                                     sharding=self._f_sharding)
+        tbl_sds = {
+            k: jax.ShapeDtypeStruct(
+                v.shape, v.dtype,
+                sharding=NamedSharding(self.mesh, self._tbl_specs[k]))
+            for k, v in self._tbl_np.items()}
+        return self._step_fn.lower(f_sds, tbl_sds)
+
+    # ----------------------------------------------------------- diagnostics
+    def macroscopics_own(self):
+        """(rho, u, node_types, own) stacked per device (numpy).
+
+        ``rho``: (D, t_pad, a^3); ``u``: (3, D, t_pad, a^3); ``own``:
+        (D, t_pad) marks tiles whose values are authoritative on device d
+        (halo + padding excluded).
+        """
+        fc = self._to_canonical(self.f)                   # (D, Q, Tp, n)
+        rho, u = col.macroscopics(jnp.moveaxis(fc, 1, 0), self.lat,
+                                  self.cfg.collision.fluid)
+        solid = self._tbl_np["solid"]
+        rho = np.where(solid, self.cfg.rho0, np.asarray(rho))
+        u = np.where(solid[None], 0.0, np.asarray(u))
+        return rho, u, self._types_np, self.plan.own
+
+    def total_mass(self) -> float:
+        fc = self._to_canonical(self.f)
+        mask = self._tbl["own_nodes"][:, None]            # (D, 1, Tp, n)
+        return float(jnp.sum(jnp.where(mask, fc, 0.0)))
+
+    # ------------------------------------------------------------ accounting
+    @property
+    def n_fluid_nodes(self) -> int:
+        return self.plan.n_fluid_own
+
+    def bytes_per_step(self) -> int:
+        n_d = self.dtype.itemsize
+        stored = sum(t.num_tiles * t.nodes_per_tile
+                     for t in self.plan.local_tilings)
+        return 2 * self.lat.q * n_d * stored
+
+    def mflups(self, seconds_per_step: float) -> float:
+        return self.plan.n_fluid_own / seconds_per_step / 1e6
+
+
+__all__ = ["ShardedLBM", "SlabPlan", "balanced_layer_partition",
+           "make_slab_plan"]

@@ -1,0 +1,238 @@
+"""Named-axis sharding rules for the LM stack.
+
+The model code annotates activations with LOGICAL axis names
+(``shard(x, "batch", "seq_act", None)``); this module maps those names onto
+MESH axes via a rules dict installed with :func:`use_rules`.  Outside any
+``use_rules`` context every annotation is the identity, so the same model
+runs unsharded on one CPU device and sharded on the production meshes.
+
+Parallelism mapping (see ``repro.launch.mesh``):
+
+* ``batch`` / ``fsdp`` -> ``("pod", "data")`` — data parallelism + ZeRO-3
+  weight sharding,
+* ``heads`` / ``kv_heads`` / ``ff`` / ``vocab`` / ``experts`` -> ``"model"``
+  — tensor / expert parallelism,
+* ``seq_act`` -> ``"model"`` — inter-layer sequence (activation) sharding.
+
+Every mapping is divisibility-guarded: a logical axis whose dimension does
+not divide evenly over the mesh axes is silently replicated, so smoke
+configs and degenerate shapes (decode seq=1) never fail to lower.
+"""
+from __future__ import annotations
+
+import contextlib
+import math
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+# mesh axis name -> size, filled in by set_axis_sizes(mesh).  Kept as a
+# module-global so pspec builders work outside a `use_rules` block (the
+# dry-run builds shardings before entering the mesh context).
+_AXIS_SIZES: dict[str, int] = {}
+
+# stack of (rules, mesh) installed by use_rules()
+_ACTIVE: list[tuple[dict, object]] = []
+
+
+def set_axis_sizes(mesh) -> None:
+    """Record the mesh axis sizes used by the divisibility guards."""
+    _AXIS_SIZES.clear()
+    _AXIS_SIZES.update(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def active_mesh():
+    return _ACTIVE[-1][1] if _ACTIVE else None
+
+
+def active_rules():
+    return _ACTIVE[-1][0] if _ACTIVE else None
+
+
+@contextlib.contextmanager
+def use_rules(rules: dict, mesh):
+    """Install ``rules`` + ``mesh`` for shard() calls inside the block."""
+    set_axis_sizes(mesh)
+    _ACTIVE.append((rules, mesh))
+    try:
+        yield
+    finally:
+        _ACTIVE.pop()
+
+
+def make_rules_for(cfg, mesh, *, multi_pod: bool | None = None,
+                   kind: str = "train") -> dict:
+    """Logical-axis -> mesh-axis rules for one (arch x mesh x kind) cell.
+
+    ``multi_pod`` is accepted for call-site symmetry but the dp axes derive
+    from the mesh axis names directly (a "pod" axis joins dp when present).
+    """
+    del multi_pod
+    names = mesh.axis_names
+    dp = tuple(a for a in ("pod", "data") if a in names)
+    tp = "model" if "model" in names else None
+    moe = getattr(cfg, "moe", None) if cfg is not None else None
+    rules = {
+        "batch": dp,
+        "fsdp": dp,
+        # one-token decode has no sequence to shard; dropping the rule
+        # avoids needless resharding constraints in the decode loop
+        "seq_act": None if kind == "decode" else tp,
+        "heads": tp,
+        "kv_heads": tp,
+        "ff": tp,
+        "vocab": tp,
+        "experts": tp if moe is not None else None,
+        "_kind": kind,
+    }
+    return rules
+
+
+# --------------------------------------------------------------------------
+# activation annotation
+# --------------------------------------------------------------------------
+def _axes_tuple(ax):
+    if ax is None:
+        return ()
+    return ax if isinstance(ax, tuple) else (ax,)
+
+
+def _fit(ax, dim: int, sizes: dict, used: set):
+    """Return the usable mesh axes for one dimension (or None).
+
+    Drops axes already used by another dimension and replicates when the
+    dimension does not divide over the remaining axes.
+    """
+    axes = tuple(a for a in _axes_tuple(ax) if a is not None and a not in used)
+    if not axes:
+        return None
+    total = math.prod(sizes.get(a, 1) for a in axes)
+    if total <= 1 or dim % total:
+        return None
+    used.update(axes)
+    return axes if len(axes) > 1 else axes[0]
+
+
+def shard(x, *names):
+    """Constrain ``x``'s sharding by logical axis names (one per dim).
+
+    Identity when no rules are active or when a name is absent/undividable.
+    """
+    rules, mesh = active_rules(), active_mesh()
+    if mesh is None or rules is None or len(names) != x.ndim:
+        return x
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    used: set = set()
+    spec = [
+        _fit(rules.get(name) if name else None, dim, sizes, used)
+        for dim, name in zip(x.shape, names)
+    ]
+    if all(s is None for s in spec):
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*spec)))
+
+
+# --------------------------------------------------------------------------
+# pytree -> PartitionSpec builders (dry-run / launcher side)
+# --------------------------------------------------------------------------
+def _leaf_names(path) -> list[str]:
+    out = []
+    for p in path:
+        if isinstance(p, jax.tree_util.DictKey):
+            out.append(str(p.key))
+        elif isinstance(p, jax.tree_util.GetAttrKey):
+            out.append(str(p.name))
+    return out
+
+
+def _set_dim(spec: list, dim_from_end: int, ax, shape, used: set):
+    """Try to assign mesh axes ``ax`` to dimension -dim_from_end."""
+    i = len(shape) - dim_from_end
+    if i < 0 or spec[i] is not None:
+        return
+    spec[i] = _fit(ax, shape[i], _AXIS_SIZES, used)
+
+
+def _param_spec(names: list[str], shape, rules: dict) -> P:
+    """Heuristic TP placement by parameter name + ZeRO-3 over the dp axes.
+
+    Works on trailing dims so the same rule covers a single layer and the
+    scan-stacked (L, ...) variant.
+    """
+    spec: list = [None] * len(shape)
+    used: set = set()
+    leaf = names[-1] if names else ""
+    in_moe = "moe" in names
+    if len(shape) == 0 or max(shape) <= 1:
+        return P(*spec)
+
+    if leaf == "table":                         # embedding (V, D) / (K, V, D)
+        _set_dim(spec, 2, rules.get("vocab"), shape, used)
+    elif "lm_head" in names and leaf == "w":    # (D, V)
+        _set_dim(spec, 1, rules.get("vocab"), shape, used)
+    elif in_moe and leaf in ("gate", "up", "down") and len(shape) >= 3:
+        _set_dim(spec, 3, rules.get("experts"), shape, used)   # (E, D, F)
+    elif leaf in ("up", "gate", "wk_ff"):       # MLP in-proj (D, F)
+        _set_dim(spec, 1, rules.get("ff"), shape, used)
+    elif leaf == "down":                        # MLP out-proj (F, D)
+        _set_dim(spec, 2, rules.get("ff"), shape, used)
+    elif leaf in ("wq", "wk", "wv"):            # attention in-proj (D, H*hd)
+        _set_dim(spec, 1, rules.get("heads"), shape, used)
+    elif leaf == "wo":                          # attention out-proj (H*hd, D)
+        _set_dim(spec, 2, rules.get("heads"), shape, used)
+
+    # ZeRO-3: shard the largest still-free dim over the dp axes
+    if len(shape) >= 2:
+        free = [i for i, s in enumerate(spec) if s is None]
+        if free:
+            i = max(free, key=lambda j: shape[j])
+            spec[i] = _fit(rules.get("fsdp"), shape[i], _AXIS_SIZES, used)
+    return P(*spec)
+
+
+def param_pspecs(params, rules: dict):
+    """PartitionSpec pytree for a parameter (ShapeDtypeStruct) pytree."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _param_spec(_leaf_names(path), leaf.shape, rules),
+        params)
+
+
+def batch_pspecs(cfg, batch, rules: dict):
+    """Input batches shard on the leading (global batch) dim over dp."""
+    def spec(leaf):
+        s: list = [None] * len(leaf.shape)
+        used: set = set()
+        if leaf.shape:
+            s[0] = _fit(rules.get("batch"), leaf.shape[0], _AXIS_SIZES, used)
+        return P(*s)
+
+    return jax.tree.map(spec, batch)
+
+
+def cache_pspecs(cfg, cache, rules: dict):
+    """Decode-state shardings: batch (dim 1 of the layer-stacked leaves)
+    over dp; heads over tp where the leaf has a heads dim."""
+    def spec(path, leaf):
+        names = _leaf_names(path)
+        s: list = [None] * len(leaf.shape)
+        used: set = set()
+        shape = leaf.shape
+        if len(shape) >= 2:
+            s[1] = _fit(rules.get("batch"), shape[1], _AXIS_SIZES, used)
+        leaf_name = names[-1] if names else ""
+        if leaf_name in ("k", "v") and len(shape) >= 5:
+            # (L, B, T, KVH, HD)
+            s[3] = _fit(rules.get("kv_heads"), shape[3], _AXIS_SIZES, used)
+        elif leaf_name in ("wkv", "ssm") and len(shape) >= 3:
+            # (L, B, H, ...)
+            s[2] = _fit(rules.get("heads"), shape[2], _AXIS_SIZES, used)
+        return P(*s)
+
+    return jax.tree_util.tree_map_with_path(spec, cache)
+
+
+__all__ = [
+    "active_mesh", "active_rules", "batch_pspecs", "cache_pspecs",
+    "make_rules_for", "param_pspecs", "set_axis_sizes", "shard", "use_rules",
+]

@@ -47,9 +47,12 @@ def make_case(name: str, scale: int = 1):
                (OUTLET, BoundarySpec("pressure", (0, 0, -1), rho=1.0)))
         return g, bcs, (False, False, False)
     if name == "spheres":
-        g = geo.random_spheres(box=64 * scale, porosity=0.7, diameter=16)
-        g = geo.duct_wrap(g) if hasattr(geo, "duct_wrap") else g
-        return g, (), (True, True, True)
+        g = geo.duct_wrap(
+            geo.random_spheres(box=64 * scale, porosity=0.7, diameter=16))
+        bcs = ((INLET, BoundarySpec("velocity", (0, 0, 1),
+                                    velocity=(0, 0, 0.02))),
+               (OUTLET, BoundarySpec("pressure", (0, 0, -1), rho=1.0)))
+        return g, bcs, (False, False, False)
     raise ValueError(name)
 
 

@@ -1,8 +1,17 @@
 import os
+import sys
 
 # Smoke tests and benches must see the REAL device count (1 CPU device) —
 # only launch/dryrun.py forces 512 placeholder devices, in its own process.
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+try:
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:
+    # bare container: run property tests via the deterministic fallback
+    import _hypothesis_fallback
+
+    sys.modules["hypothesis"] = _hypothesis_fallback
 
 import jax  # noqa: E402
 

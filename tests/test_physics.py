@@ -10,7 +10,8 @@ import pytest
 def _x64():
     """True float64 for physics tolerances (engines request float64
     explicitly; without the flag JAX silently truncates to f32)."""
-    with jax.enable_x64(True):
+    from jax.experimental import enable_x64
+    with enable_x64(True):
         yield
 from hypothesis import given, settings, strategies as st
 
