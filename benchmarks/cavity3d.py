@@ -20,19 +20,21 @@ def run(sizes=(20, 32, 48), dtype="float32", steps=15):
     for b in sizes:
         g = cavity3d(b)
         for mode, model, fluid in VARIANTS:
-            mf, eng = timed_mflups(g, mode=mode, model=model, fluid=fluid,
-                                   dtype=dtype, steps=steps, boundaries=BCS)
+            res = timed_mflups(g, mode=mode, model=model, fluid=fluid,
+                               dtype=dtype, steps=steps, boundaries=BCS)
             rows.append({"b": b, "variant": variant_name(mode, model, fluid),
-                         "mflups": round(mf, 3),
-                         "eta_t": round(eng.tiling.tile_utilisation, 4)})
+                         "mflups": round(res.mflups, 3),
+                         "mflups_dispatch": round(res.mflups_dispatch, 3),
+                         "eta_t": round(res.eng.tiling.tile_utilisation, 4)})
     return rows
 
 
 def main():
     rows = run()
-    print("b,variant,MFLUPS,eta_t")
+    print("b,variant,MFLUPS,MFLUPS_dispatch,eta_t")
     for r in rows:
-        print(f"{r['b']},{r['variant']},{r['mflups']},{r['eta_t']}")
+        print(f"{r['b']},{r['variant']},{r['mflups']},"
+              f"{r['mflups_dispatch']},{r['eta_t']}")
     by = {(r["b"], r["variant"]): r["mflups"] for r in rows}
     b = 48
     assert by[(b, "rw_only")] > by[(b, "lbgk_incompr")]

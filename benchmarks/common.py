@@ -6,9 +6,18 @@ assert on — are the paper's structural claims: relative ordering of kernel
 variants, dependence on tile utilisation (not porosity), layout transaction
 counts, and channel-utilisation curves.  TPU-projected numbers come from
 the dry-run roofline terms (benchmarks/roofline_table.py).
+
+Timing methodology: the primary number (``TimedRun.mflups``) comes from
+``eng.run(steps)`` — all iterations inside ONE jitted fori_loop, so a
+single Python dispatch covers the whole measurement (the kernel-only
+number).  ``mflups_dispatch`` re-times the same engine through
+``eng.step()`` one jit call per iteration, which is what a host-driven
+loop would pay; the old implementation reported ONLY that number, silently
+inflating seconds-per-step with Python/jit dispatch overhead.
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 
 import jax
@@ -33,19 +42,62 @@ def variant_name(mode, model, fluid):
     return f"{model}_{'incompr' if fluid == 'incompressible' else 'qcompr'}"
 
 
+@dataclasses.dataclass
+class TimedRun:
+    """Result of one timed benchmark configuration."""
+
+    mflups: float            # kernel-only: fori_loop run(), one dispatch
+    mflups_dispatch: float   # one Python dispatch + jit call per step
+    seconds_per_step: float
+    seconds_per_step_dispatch: float
+    eng: SparseTiledLBM
+
+    def __iter__(self):      # allow ``mf, eng = timed_mflups(...)``
+        return iter((self.mflups, self.eng))
+
+
 def timed_mflups(geometry, *, mode="full", model="lbgk",
                  fluid="incompressible", layout="paper", dtype="float32",
-                 steps=20, warmup=3, boundaries=(), periodic=(False,) * 3):
+                 steps=20, warmup=3, boundaries=(), periodic=(False,) * 3,
+                 backend="gather"):
+    """Time one engine configuration; returns a :class:`TimedRun`.
+
+    ``backend='fused'`` measures the paper's fused Pallas stream+collide
+    kernel (forces the kernel's own packed layout, so ``layout`` is
+    ignored); ``backend='gather'`` measures the jnp reference path with
+    the requested per-direction storage layout.
+    """
     cfg = LBMConfig(
         collision=C.CollisionConfig(model=model or "lbgk",
                                     fluid=fluid or "incompressible", tau=0.6),
-        layout_scheme=layout, dtype=dtype, kernel_mode=mode,
+        layout_scheme="xyz" if backend == "fused" else layout,
+        dtype=dtype, kernel_mode=mode, backend=backend,
         boundaries=boundaries, periodic=periodic)
     eng = SparseTiledLBM(geometry, cfg)
-    eng.step(warmup)
+
+    # kernel-only: everything inside one jitted fori_loop.  Warm with the
+    # SAME step count so the timed call reuses the compiled loop (warming
+    # with a different count would leave the timed one cold and put the
+    # compile inside the measurement window).
+    for _ in range(max(1, -(-warmup // steps))):
+        eng.run(steps)
+    jax.block_until_ready(eng.f)
+    t0 = time.perf_counter()
+    eng.run(steps)
+    jax.block_until_ready(eng.f)
+    dt_run = (time.perf_counter() - t0) / steps
+
+    # dispatch-included: one Python->jit round-trip per step
+    eng.step(1)
     jax.block_until_ready(eng.f)
     t0 = time.perf_counter()
     eng.step(steps)
     jax.block_until_ready(eng.f)
-    dt = (time.perf_counter() - t0) / steps
-    return eng.n_fluid_nodes / dt / 1e6, eng
+    dt_step = (time.perf_counter() - t0) / steps
+
+    return TimedRun(
+        mflups=eng.n_fluid_nodes / dt_run / 1e6,
+        mflups_dispatch=eng.n_fluid_nodes / dt_step / 1e6,
+        seconds_per_step=dt_run,
+        seconds_per_step_dispatch=dt_step,
+        eng=eng)

@@ -1,0 +1,28 @@
+"""CI benchmark smoke — keeps the benchmark scripts from rotting.
+
+Two cheap probes (CI-budget sized, not paper-sized):
+  1. the channel-utilisation analysis (pure numpy, exactly reproducible —
+     asserts all its §3.3 claims), and
+  2. one fused-backend timing on a tiny cavity: exercises the full
+     timed_mflups path (run()-based kernel-only + dispatch-included
+     numbers) through the Pallas stream+collide kernel in interpret mode.
+"""
+from __future__ import annotations
+
+from benchmarks import channel_utilisation
+from benchmarks.common import timed_mflups
+from repro.data.geometry import cavity3d
+
+
+def main():
+    channel_utilisation.main()
+    res = timed_mflups(cavity3d(16), steps=3, warmup=1, backend="fused")
+    assert res.mflups > 0 and res.mflups_dispatch > 0
+    assert res.eng.cfg.backend == "fused"
+    print(f"fused_smoke,cavity16,mflups={res.mflups:.4f},"
+          f"mflups_dispatch={res.mflups_dispatch:.4f}")
+    print("# benchmark smoke OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,12 +1,14 @@
 """Core sparse-tiled LBM — the paper's primary contribution.
 
 Public API:
-    SparseTiledLBM, LBMConfig  — the solver
+    SparseTiledLBM, LBMConfig  — the solver (backend='gather' | 'fused')
+    BACKENDS                   — available step backends
     DenseLBM                   — dense baseline
     CollisionConfig            — collision/fluid model selection
     BoundarySpec               — open boundaries (Zou-He / pressure)
     tile_geometry, Tiling      — host-side tiler (Algorithm 1)
 """
+from .backends import BACKENDS
 from .boundary import BoundarySpec
 from .collision import CollisionConfig
 from .dense import DenseLBM
@@ -15,7 +17,7 @@ from .lattice import d2q9, d3q19, get_lattice
 from .tiling import FLUID, INLET, OUTLET, SOLID, Tiling, tile_geometry
 
 __all__ = [
-    "BoundarySpec", "CollisionConfig", "DenseLBM", "LBMConfig",
+    "BACKENDS", "BoundarySpec", "CollisionConfig", "DenseLBM", "LBMConfig",
     "SparseTiledLBM", "Tiling", "tile_geometry",
     "d2q9", "d3q19", "get_lattice",
     "FLUID", "INLET", "OUTLET", "SOLID",

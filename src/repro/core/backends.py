@@ -1,0 +1,231 @@
+"""Step backends for :class:`repro.core.engine.SparseTiledLBM`.
+
+A backend owns the device-resident representation of f and produces one LBM
+iteration as a pure ``state -> state`` function the engine jits (and loops
+with ``fori_loop`` in ``run``):
+
+* ``gather``  — one jnp gather per direction from the per-direction storage
+  layout (supports every ``layout_scheme``), jnp or Pallas collision
+  (``use_kernel``).  This is the reference path.
+* ``fused``   — the paper's actual contribution: the fused Pallas
+  stream+collide kernel (``repro.kernels.stream_collide``) over state kept
+  PERSISTENTLY in the kernel's packed (T+1, Q, n) layout.  Packing happens
+  once at init and unpacking only in diagnostics, so ``step``/``run``
+  contain zero layout shuffles: the jitted hot loop is the pallas_call, a
+  scratch-row reset, and (only when open boundaries exist) one small
+  gather+scatter restricted to the boundary tiles for the NEBB
+  reconstruction pass.
+
+Both backends produce identical physics: float64 parity is pinned to 1e-12
+in tests/test_backend_fused.py on all benchmark geometry families.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import collision as col
+from .boundary import apply_open_boundary
+from .streaming import StreamTables
+from .tiling import SOLID, Tiling
+
+BACKENDS = ("gather", "fused")
+
+
+def make_backend(name: str, cfg, lat, tiling: Tiling, tables: StreamTables,
+                 interpret: bool):
+    if name == "gather":
+        return GatherBackend(cfg, lat, tiling, tables, interpret)
+    if name == "fused":
+        return FusedBackend(cfg, lat, tiling, tables, interpret)
+    raise ValueError(f"unknown backend {name!r}; expected one of {BACKENDS}")
+
+
+def boundary_pass_tables(node_types: np.ndarray, gather_idx: np.ndarray,
+                         boundaries, q: int, n: int):
+    """Host-side tables for the fused backends' masked NEBB pass.
+
+    ``node_types``: (T, n) uint8; ``gather_idx``: (Q, T, n) streaming
+    indices in the canonical per-direction flat space.  Returns numpy
+    ``(tiles (B,), packed_gather (Q, B, n), type_masks (S, B, n),
+    solid (B, n))`` restricted to the tiles that hold boundary nodes.
+    Shared by ``FusedBackend`` and ``ShardedLBM`` so the two fused paths
+    cannot drift.
+    """
+    from repro.kernels.stream_collide import packed_gather_indices
+
+    t = node_types.shape[0]
+    node_bc = np.zeros_like(node_types, bool)
+    for tv, _ in boundaries:
+        node_bc |= node_types == tv
+    bt = np.nonzero(node_bc.any(axis=1))[0].astype(np.int32)
+    packed = packed_gather_indices(gather_idx[:, bt, :], q, t, n)
+    type_masks = np.stack([node_types[bt] == tv for tv, _ in boundaries])
+    return bt, packed, type_masks, node_types[bt] == SOLID
+
+
+def nebb_boundary_pass(f_pre, out, lat, collision_cfg, force, specs,
+                       tiles, gather, type_masks, solid):
+    """The fused backends' post-kernel masked NEBB pass (device-side).
+
+    Re-streams ONLY the boundary tiles from the pre-step packed state
+    ``f_pre`` via the precomputed packed-layout ``gather``, applies the
+    NEBB rebuild per boundary spec + collision + solid masking, and
+    scatters the result over the kernel output ``out``.  Exactness: the
+    rebuild sees post-streaming / pre-collision values, same as the gather
+    backend's in-line application.
+    """
+    q, n = out.shape[-2], out.shape[-1]
+    f_in = jnp.take(f_pre.reshape(-1), gather.reshape(-1),
+                    axis=0).reshape(q, -1, n)           # (Q, B, n)
+    for mask, spec in zip(type_masks, specs):
+        f_in = apply_open_boundary(f_in, mask, spec, lat)
+    f_out, _, _ = col.collide(f_in, lat, collision_cfg, force)
+    f_out = jnp.where(solid[None], 0.0, f_out)
+    return out.at[tiles].set(jnp.moveaxis(f_out, 0, 1))
+
+
+class GatherBackend:
+    """One-gather-per-direction streaming + jnp (or Pallas) collision."""
+
+    name = "gather"
+
+    def __init__(self, cfg, lat, tiling: Tiling, tables: StreamTables,
+                 interpret: bool):
+        self.cfg, self.lat, self.tiling, self.tables = cfg, lat, tiling, tables
+        self.interpret = interpret
+        types = tiling.node_types                            # (T, n) canonical
+        self._solid = jnp.asarray(types == SOLID)
+        self._bc_masks = [
+            (jnp.asarray(types == tv), spec) for tv, spec in cfg.boundaries
+        ]
+        self._gather = jnp.asarray(tables.gather_idx.reshape(lat.q, -1))
+
+    # ------------------------------------------------- layout shuffles
+    def to_storage(self, f_canon: jnp.ndarray) -> jnp.ndarray:
+        """canonical node order -> per-direction storage layout."""
+        if self.cfg.layout_scheme == "xyz":
+            return f_canon
+        return jnp.stack(
+            [f_canon[q][..., self.tables.inv_perms[q]]
+             for q in range(self.lat.q)]
+        )
+
+    def canonical(self, f_store: jnp.ndarray) -> jnp.ndarray:
+        if self.cfg.layout_scheme == "xyz":
+            return f_store
+        return jnp.stack(
+            [f_store[q][..., self.tables.perms[q]] for q in range(self.lat.q)]
+        )
+
+    # ------------------------------------------------------------ step
+    def initial_state(self, feq_canon: jnp.ndarray) -> jnp.ndarray:
+        return self.to_storage(feq_canon)
+
+    def _collide(self, f_in):
+        if self.cfg.use_kernel:
+            from repro.kernels import ops as kops
+
+            return kops.collide_tiles(
+                f_in,
+                self._solid,
+                self.lat,
+                self.cfg.collision,
+                force=self.cfg.force,
+                interpret=self.interpret,
+            )
+        f_out, _, _ = col.collide(f_in, self.lat, self.cfg.collision,
+                                  self.cfg.force)
+        return f_out
+
+    def step(self, f_store: jnp.ndarray) -> jnp.ndarray:
+        q = self.lat.q
+        t, n = self.tiling.num_tiles, self.tiling.nodes_per_tile
+        if self.cfg.kernel_mode == "rw_only":
+            # paper §4.1: read + write the node's own data, no propagation
+            return f_store + 0.0
+        # streaming + bounce-back: one gather per direction (canonical out)
+        f_in = jnp.take(f_store.reshape(-1), self._gather,
+                        axis=0).reshape(q, t, n)
+        if self.cfg.kernel_mode == "propagation_only":
+            return self.to_storage(f_in)
+        # open boundaries (Zou-He NEBB / constant pressure)
+        for mask, spec in self._bc_masks:
+            f_in = apply_open_boundary(f_in, mask, spec, self.lat)
+        f_out = self._collide(f_in)
+        f_out = jnp.where(self._solid[None], 0.0, f_out)
+        return self.to_storage(f_out)
+
+
+class FusedBackend:
+    """Persistent packed (T+1, Q, n) state + the fused Pallas kernel.
+
+    The scratch tile at index T stays all-zero / all-SOLID; out-of-grid and
+    empty neighbours point at it so bounce-back needs no branches.  Open
+    boundaries are handled by a post-kernel masked pass: the NEBB
+    reconstruction (which must see post-streaming, pre-collision values)
+    re-streams ONLY the tiles containing boundary nodes from the pre-step
+    state via a precomputed packed-layout gather, applies the boundary
+    rebuild + collision there, and scatters those tiles over the kernel
+    output.
+    """
+
+    name = "fused"
+
+    def __init__(self, cfg, lat, tiling: Tiling, tables: StreamTables,
+                 interpret: bool):
+        from repro.kernels.stream_collide import build_neighbor_table
+
+        if cfg.layout_scheme != "xyz":
+            raise ValueError(
+                "backend='fused' keeps f in the kernel's packed tile layout; "
+                f"layout_scheme must be 'xyz' (got {cfg.layout_scheme!r})")
+        self.cfg, self.lat, self.tiling = cfg, lat, tiling
+        self.interpret = interpret
+        t, n = tiling.num_tiles, tiling.nodes_per_tile
+        q = lat.q
+
+        types = np.full((t + 1, n), SOLID, np.uint8)
+        types[:t] = tiling.node_types
+        self._types = jnp.asarray(types)
+        self._nbrs = jnp.asarray(build_neighbor_table(tiling, cfg.periodic))
+        self._solid = jnp.asarray(tiling.node_types == SOLID)
+
+        self._bc = None
+        if cfg.boundaries and cfg.kernel_mode == "full":
+            bt, packed, type_masks, solid_b = boundary_pass_tables(
+                tiling.node_types, tables.gather_idx, cfg.boundaries, q, n)
+            self._bc = {
+                "tiles": jnp.asarray(bt),
+                "gather": jnp.asarray(packed),
+                "type_masks": jnp.asarray(type_masks),
+                "solid": jnp.asarray(solid_b),
+                "specs": tuple(spec for _, spec in cfg.boundaries),
+            }
+
+    # ------------------------------------------------------------ state
+    def initial_state(self, feq_canon: jnp.ndarray) -> jnp.ndarray:
+        """Pack once — the only canonical->packed shuffle in the engine."""
+        q, t, n = feq_canon.shape
+        f = jnp.zeros((t + 1, q, n), feq_canon.dtype)
+        return f.at[:t].set(jnp.moveaxis(feq_canon, 0, 1))
+
+    def canonical(self, f_packed: jnp.ndarray) -> jnp.ndarray:
+        """Unpack for diagnostics only — never called from step/run."""
+        return jnp.moveaxis(f_packed[:-1], 0, 1)       # (Q, T, n)
+
+    # ------------------------------------------------------------ step
+    def step(self, f: jnp.ndarray) -> jnp.ndarray:
+        from repro.kernels.stream_collide import stream_collide_tiles
+
+        cfg = self.cfg
+        out = stream_collide_tiles(
+            f, self._types, self._nbrs, self.lat, cfg.collision,
+            a=cfg.a, force=cfg.force, interpret=self.interpret,
+            mode=cfg.kernel_mode)
+        if self._bc is not None:
+            tab = self._bc
+            out = nebb_boundary_pass(
+                f, out, self.lat, cfg.collision, cfg.force, tab["specs"],
+                tab["tiles"], tab["gather"], tab["type_masks"], tab["solid"])
+        return out

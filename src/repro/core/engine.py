@@ -1,31 +1,47 @@
 """SparseTiledLBM — the paper's solver as a composable JAX module.
 
 One LBM iteration (paper Algorithm 2, fused): pull-streaming (with half-way
-bounce-back folded into the gather tables), open-boundary reconstruction,
-collision, solid masking.  Two copies of f are kept implicitly by functional
-purity + buffer donation (the paper's explicit f / f' pair).
+bounce-back folded into the gather tables / the kernel's solid-source test),
+open-boundary reconstruction, collision, solid masking.  Two copies of f are
+kept implicitly by functional purity + buffer donation (the paper's explicit
+f / f' pair).
+
+The step itself is pluggable (``LBMConfig.backend``, see
+``repro.core.backends``):
+
+* ``backend="gather"`` — one jnp gather per direction over the
+  per-direction storage layout; the collision math alone can be swapped for
+  the Pallas collision kernel with ``use_kernel=True`` (NOT the paper's
+  fused kernel — the state still round-trips through pack/unpack inside
+  ``repro.kernels.ops.collide_tiles`` each step).
+* ``backend="fused"`` — the paper's fused Pallas stream+collide kernel
+  (``repro.kernels.stream_collide``) over state held persistently in the
+  kernel's packed (T+1, Q, n) layout: packed once at init, unpacked only in
+  diagnostics, zero layout shuffles inside ``step``/``run``.
 
 The same engine runs:
-* on CPU for validation/benchmarks (this container),
+* on CPU for validation (Pallas kernels in interpret mode — the default
+  when no tpu/gpu backend is active; a warning is emitted so interpreted
+  numbers are never mistaken for benchmarks),
 * distributed via ``repro.dist.lbm.ShardedLBM`` (slab decomposition of the
   tile grid — the multi-GPU extension the paper leaves as future work),
-* with the Pallas collision kernel (``repro.kernels``) swapped in for the
-  pure-jnp collision via ``use_kernel=True``.
+  which composes its halo exchange with either backend per slab.
 """
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
+import warnings
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from . import collision as col
-from .boundary import BoundarySpec, apply_open_boundary
+from .backends import BACKENDS, make_backend
+from .boundary import BoundarySpec
 from .lattice import get_lattice
 from .streaming import build_stream_tables
-from .tiling import SOLID, Tiling, tile_geometry, untile
+from .tiling import Tiling, tile_geometry, untile
 
 
 @dataclasses.dataclass(frozen=True)
@@ -44,16 +60,35 @@ class LBMConfig:
     force: tuple[float, float, float] | None = None
     rho0: float = 1.0
     u0: tuple[float, float, float] = (0.0, 0.0, 0.0)
-    use_kernel: bool = False                  # Pallas collision kernel
-    kernel_interpret: bool = True             # interpret mode (CPU container)
+    backend: str = "gather"                   # 'gather' | 'fused'
+    use_kernel: bool = False                  # gather backend: Pallas collision
+    # Pallas interpret mode: None = auto (interpret unless on tpu/gpu)
+    kernel_interpret: bool | None = None
     # paper §4.1 kernel variants: 'full' | 'propagation_only' | 'rw_only'
     kernel_mode: str = "full"
+
+
+def _resolve_interpret(cfg: LBMConfig) -> bool:
+    from repro.kernels.ops import resolve_interpret
+
+    # the fused kernel is TPU-only Pallas (scalar prefetch); the collision
+    # kernel lowers on tpu and gpu
+    interpret = resolve_interpret(cfg.kernel_interpret,
+                                  tpu_only=cfg.backend == "fused")
+    if interpret and (cfg.backend == "fused" or cfg.use_kernel):
+        warnings.warn(
+            "Pallas LBM kernels will run in INTERPRET mode (jax backend="
+            f"{jax.default_backend()!r}); results are for validation, not "
+            "benchmarking. Pass kernel_interpret=False on tpu/gpu.",
+            RuntimeWarning, stacklevel=3)
+    return interpret
 
 
 class SparseTiledLBM:
     """Sparse tiled LBM engine (the paper's contribution)."""
 
     def __init__(self, node_type: np.ndarray, cfg: LBMConfig):
+        assert cfg.backend in BACKENDS, cfg.backend
         self.cfg = cfg
         self.lat = get_lattice(cfg.lattice)
         self.tiling: Tiling = tile_geometry(node_type, cfg.a)
@@ -61,81 +96,27 @@ class SparseTiledLBM:
             self.tiling, self.lat, cfg.layout_scheme, cfg.periodic
         )
         self.dtype = jnp.dtype(cfg.dtype)
+        self.kernel_interpret = _resolve_interpret(cfg)
 
-        t, n = self.tiling.num_tiles, self.tiling.nodes_per_tile
-        types = self.tiling.node_types                       # (T, n) canonical
-        self._solid = jnp.asarray(types == SOLID)
-        self._bc_masks = [
-            (jnp.asarray(types == tv), spec) for tv, spec in cfg.boundaries
-        ]
-        self._gather = jnp.asarray(self.tables.gather_idx.reshape(self.lat.q, -1))
-        self._perms = jnp.asarray(self.tables.perms)         # (Q, n)
-        self._inv_perms = jnp.asarray(self.tables.inv_perms)
+        self.backend = make_backend(cfg.backend, cfg, self.lat, self.tiling,
+                                    self.tables, self.kernel_interpret)
+        self._solid = self.backend._solid                    # (T, n) canonical
 
-        self.f = self._initial_state()
-        self._step_fn = jax.jit(self._step, donate_argnums=0)
+        self.f = self.backend.initial_state(self._initial_feq())
+        self._step_fn = jax.jit(self.backend.step, donate_argnums=0)
         self._multi_cache: dict[int, callable] = {}
 
     # ------------------------------------------------------------------ init
-    def _initial_state(self) -> jnp.ndarray:
+    def _initial_feq(self) -> jnp.ndarray:
         t, n = self.tiling.num_tiles, self.tiling.nodes_per_tile
         rho = jnp.full((t, n), self.cfg.rho0, dtype=self.dtype)
         u = jnp.broadcast_to(
             jnp.asarray(self.cfg.u0, self.dtype)[:, None, None], (3, t, n)
         )
         feq = col.equilibrium(rho, u, self.lat, self.cfg.collision.fluid)
-        feq = jnp.where(self._solid[None], 0.0, feq)
-        return self._to_storage(feq)
-
-    # ------------------------------------------------------- layout shuffles
-    def _to_storage(self, f_canon: jnp.ndarray) -> jnp.ndarray:
-        """canonical node order -> per-direction storage layout."""
-        if self.cfg.layout_scheme == "xyz":
-            return f_canon
-        return jnp.stack(
-            [f_canon[q][..., self.tables.inv_perms[q]] for q in range(self.lat.q)]
-        )
-
-    def _to_canonical(self, f_store: jnp.ndarray) -> jnp.ndarray:
-        if self.cfg.layout_scheme == "xyz":
-            return f_store
-        return jnp.stack(
-            [f_store[q][..., self.tables.perms[q]] for q in range(self.lat.q)]
-        )
+        return jnp.where(self._solid[None], 0.0, feq)        # (Q, T, n)
 
     # ------------------------------------------------------------------ step
-    def _collide(self, f_in):
-        if self.cfg.use_kernel:
-            from repro.kernels import ops as kops
-
-            return kops.collide_tiles(
-                f_in,
-                self._solid,
-                self.lat,
-                self.cfg.collision,
-                force=self.cfg.force,
-                interpret=self.cfg.kernel_interpret,
-            )
-        f_out, _, _ = col.collide(f_in, self.lat, self.cfg.collision, self.cfg.force)
-        return f_out
-
-    def _step(self, f_store: jnp.ndarray) -> jnp.ndarray:
-        q = self.lat.q
-        t, n = self.tiling.num_tiles, self.tiling.nodes_per_tile
-        if self.cfg.kernel_mode == "rw_only":
-            # paper §4.1: read + write the node's own data, no propagation
-            return f_store + 0.0
-        # streaming + bounce-back: one gather per direction (canonical order out)
-        f_in = jnp.take(f_store.reshape(-1), self._gather, axis=0).reshape(q, t, n)
-        if self.cfg.kernel_mode == "propagation_only":
-            return self._to_storage(f_in)
-        # open boundaries (Zou-He NEBB / constant pressure)
-        for mask, spec in self._bc_masks:
-            f_in = apply_open_boundary(f_in, mask, spec, self.lat)
-        f_out = self._collide(f_in)
-        f_out = jnp.where(self._solid[None], 0.0, f_out)
-        return self._to_storage(f_out)
-
     def step(self, steps: int = 1) -> None:
         for _ in range(steps):
             self.f = self._step_fn(self.f)
@@ -145,7 +126,7 @@ class SparseTiledLBM:
         if steps not in self._multi_cache:
             fn = jax.jit(
                 lambda f: jax.lax.fori_loop(
-                    0, steps, lambda i, x: self._step(x), f
+                    0, steps, lambda i, x: self.backend.step(x), f
                 ),
                 donate_argnums=0,
             )
@@ -154,7 +135,7 @@ class SparseTiledLBM:
 
     # ----------------------------------------------------------- diagnostics
     def macroscopics(self):
-        f_canon = self._to_canonical(self.f)
+        f_canon = self.backend.canonical(self.f)
         rho, u = col.macroscopics(f_canon, self.lat, self.cfg.collision.fluid)
         rho = jnp.where(self._solid, self.cfg.rho0, rho)
         u = jnp.where(self._solid[None], 0.0, u)
@@ -168,7 +149,7 @@ class SparseTiledLBM:
         return rho_d, u_d
 
     def total_mass(self) -> float:
-        f_canon = self._to_canonical(self.f)
+        f_canon = self.backend.canonical(self.f)
         fluid = ~self._solid
         return float(jnp.sum(jnp.where(fluid[None], f_canon, 0.0)))
 

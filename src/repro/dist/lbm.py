@@ -9,15 +9,22 @@ tile-layer per cut face (streaming reaches one node, so one a-thick tile
 layer per side is enough for any number of steps between exchanges = 1).
 
 Per device the slab is just another sparse tiled problem: the slab
-geometry is re-tiled with the host tiler and gets its own streaming tables,
-so cross-slab links resolve into the local halo tiles with zero special
-cases.  One LBM iteration under ``shard_map`` is then
+geometry is re-tiled with the host tiler and gets its own streaming tables
+(gather backend) or neighbour table (fused backend), so cross-slab links
+resolve into the local halo tiles with zero special cases.  One LBM
+iteration under ``shard_map`` is then
 
     1. halo exchange — ``jax.lax.ppermute`` of the boundary tile layers
        (the paper's future-work multi-GPU extension; ISSUE: fused into the
        per-step update, not a separate host phase),
-    2. the unchanged fused step: gather-streaming + open-boundary
-       reconstruction + collision + solid masking.
+    2. the per-slab step, selected by ``LBMConfig.backend``:
+       * ``gather`` — gather-streaming + open-boundary reconstruction +
+         collision + solid masking on (Q, Tp, n) state;
+       * ``fused``  — the Pallas stream+collide kernel on state kept in
+         its packed (Tp, Q, n) layout persistently (the t_pad dummy slot
+         doubles as the kernel's scratch tile), plus the masked NEBB
+         boundary pass over boundary tiles only.  No layout shuffles in
+         the hot loop — the halo exchange slices whole tile rows.
 
 Owned-tile results are bitwise-reproducible vs the single-device
 ``SparseTiledLBM`` (the update is elementwise given identical inputs); the
@@ -36,7 +43,7 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import collision as col
-from repro.core.engine import LBMConfig
+from repro.core.engine import LBMConfig, _resolve_interpret
 from repro.core.boundary import apply_open_boundary
 from repro.core.lattice import get_lattice
 from repro.core.streaming import build_stream_tables
@@ -192,6 +199,10 @@ class ShardedLBM:
         self.lat = get_lattice(cfg.lattice)
         self.dtype = jnp.dtype(cfg.dtype)
         self.dryrun = dryrun
+        self.fused = cfg.backend == "fused"
+        if self.fused and cfg.layout_scheme != "xyz":
+            raise ValueError("backend='fused' requires layout_scheme='xyz'")
+        self.kernel_interpret = _resolve_interpret(cfg)
 
         sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
         n_slab = math.prod(sizes[a] for a in axis)
@@ -228,9 +239,11 @@ class ShardedLBM:
         gather = np.empty((d_cnt, q, tp, n), np.int32)
         solid = np.ones((d_cnt, tp, n), bool)
         types = np.zeros((d_cnt, tp, n), np.uint8)
+        tabs_of_dev = []
         self._perms = None
         for d, lt in enumerate(plan.local_tilings):
             tabs = build_stream_tables(lt, lat, cfg.layout_scheme, periodic)
+            tabs_of_dev.append(tabs)
             if self._perms is None:     # layout perms are device-independent
                 self._perms = tabs.perms
                 self._inv_perms = tabs.inv_perms
@@ -246,18 +259,19 @@ class ShardedLBM:
             solid[d, :t_loc] = lt.node_types == SOLID
             types[d, :t_loc] = lt.node_types
 
-        bc = None
-        if cfg.boundaries:
-            bc = np.stack([types == tv for tv, _ in cfg.boundaries])
         own_nodes = plan.own[:, :, None] & ~solid
-
-        tbl = {"gather": gather, "solid": solid, "own_nodes": own_nodes}
-        specs = {"gather": P("slab", None, None, None),
-                 "solid": P("slab", None, None),
+        tbl = {"solid": solid, "own_nodes": own_nodes}
+        specs = {"solid": P("slab", None, None),
                  "own_nodes": P("slab", None, None)}
-        if bc is not None:
-            tbl["bc"] = bc
-            specs["bc"] = P(None, "slab", None, None)
+
+        if self.fused:
+            self._build_fused_tables(tbl, specs, types, tabs_of_dev, periodic)
+        else:
+            tbl["gather"] = gather
+            specs["gather"] = P("slab", None, None, None)
+            if cfg.boundaries:
+                tbl["bc"] = np.stack([types == tv for tv, _ in cfg.boundaries])
+                specs["bc"] = P(None, "slab", None, None)
 
         if d_cnt > 1:
             up_send = [_tiles_at_layer(lt, plan.owned_layer_range_local(d)[1] - 1)
@@ -306,7 +320,58 @@ class ShardedLBM:
         self._types_np = types
         self._f_spec = P("slab", None, None, None)
         self._f_sharding = NamedSharding(self.mesh, self._f_spec)
-        self._f_shape = (d_cnt, q, tp, n)
+        # fused keeps the kernel's packed per-tile layout; gather keeps the
+        # per-direction layout
+        self._f_shape = ((d_cnt, tp, q, n) if self.fused
+                         else (d_cnt, q, tp, n))
+
+    def _build_fused_tables(self, tbl, specs, types, tabs_of_dev,
+                            periodic) -> None:
+        """Per-slab tables for the fused kernel: neighbour tables (dummy
+        slot = scratch tile) and the packed-layout boundary-pass tables."""
+        from repro.core.backends import boundary_pass_tables
+        from repro.kernels.stream_collide import build_neighbor_table
+
+        cfg, plan = self.cfg, self.plan
+        q, tp, n = self.lat.q, plan.t_pad, plan.nodes_per_tile
+        d_cnt, dummy = plan.n_dev, plan.t_pad - 1
+
+        tbl["types"] = types
+        specs["types"] = P("slab", None, None)
+        nbrs = np.full((d_cnt, dummy, 27), dummy, np.int32)
+        for d, lt in enumerate(plan.local_tilings):
+            nb = build_neighbor_table(lt, periodic)     # scratch = t_loc
+            nbrs[d, :lt.num_tiles] = np.where(nb == lt.num_tiles, dummy, nb)
+        tbl["nbrs"] = nbrs
+        specs["nbrs"] = P("slab", None, None)
+
+        if not (cfg.boundaries and cfg.kernel_mode == "full"):
+            return
+        # per-device boundary-pass tables from the shared builder, padded to
+        # a common width; padded rows target the dummy tile's (zero) slots
+        per_dev = [boundary_pass_tables(lt.node_types,
+                                        tabs_of_dev[d].gather_idx,
+                                        cfg.boundaries, q, n)
+                   for d, lt in enumerate(plan.local_tilings)]
+        b_max = max(1, max(len(r[0]) for r in per_dev))
+        qi = np.arange(q)[:, None, None]
+        oi = np.arange(n)[None, None, :]
+        bct = np.full((d_cnt, b_max), dummy, np.int32)
+        bcg = np.broadcast_to(dummy * (q * n) + qi * n + oi,
+                              (d_cnt, q, b_max, n)).copy().astype(np.int32)
+        bcm = np.zeros((len(cfg.boundaries), d_cnt, b_max, n), bool)
+        bcs = np.ones((d_cnt, b_max, n), bool)
+        for d, (bt, packed, type_masks, solid_b) in enumerate(per_dev):
+            if not len(bt):
+                continue
+            bct[d, :len(bt)] = bt
+            bcg[d, :, :len(bt)] = packed
+            bcm[:, d, :len(bt)] = type_masks
+            bcs[d, :len(bt)] = solid_b
+        tbl.update(bct=bct, bcg=bcg, bcm=bcm, bcs=bcs)
+        specs.update(bct=P("slab", None), bcg=P("slab", None, None, None),
+                     bcm=P(None, "slab", None, None),
+                     bcs=P("slab", None, None))
 
     # --------------------------------------------------------------- state
     def _to_storage(self, f_canon):
@@ -327,14 +392,24 @@ class ShardedLBM:
              for qq in range(self.lat.q)], axis=q_axis)
 
     def _initial_state(self):
-        d_cnt, q, tp, n = self._f_shape
+        d_cnt, tp, n = (self.plan.n_dev, self.plan.t_pad,
+                        self.plan.nodes_per_tile)
         rho = jnp.full((d_cnt, tp, n), self.cfg.rho0, self.dtype)
         u = jnp.broadcast_to(
             jnp.asarray(self.cfg.u0, self.dtype)[:, None, None, None],
             (3, d_cnt, tp, n))
         feq = col.equilibrium(rho, u, self.lat, self.cfg.collision.fluid)
         feq = jnp.where(jnp.asarray(self._tbl_np["solid"])[None], 0.0, feq)
+        if self.fused:
+            # pack once at init: (Q, D, Tp, n) -> (D, Tp, Q, n)
+            return jnp.moveaxis(feq, 0, 2)
         return self._to_storage(jnp.moveaxis(feq, 0, 1))  # (D, Q, Tp, n)
+
+    def _canonical_state(self, f):
+        """Backend-native state -> (D, Q, Tp, n) canonical (diagnostics)."""
+        if self.fused:
+            return jnp.swapaxes(f, 1, 2)
+        return self._to_canonical(f)
 
     # ---------------------------------------------------------------- step
     def _collide(self, f_in, solid):
@@ -343,7 +418,7 @@ class ShardedLBM:
 
             return kops.collide_tiles(
                 f_in, solid, self.lat, self.cfg.collision,
-                force=self.cfg.force, interpret=self.cfg.kernel_interpret)
+                force=self.cfg.force, interpret=self.kernel_interpret)
         f_out, _, _ = col.collide(f_in, self.lat, self.cfg.collision,
                                   self.cfg.force)
         return f_out
@@ -353,7 +428,7 @@ class ShardedLBM:
         d_cnt, q, tp, n = (self.plan.n_dev, self.lat.q, self.plan.t_pad,
                            self.plan.nodes_per_tile)
 
-        def body(f, tbl):
+        def body_gather(f, tbl):
             f = f[0]                                      # (Q, Tp, n)
             if d_cnt > 1:
                 # halo exchange: boundary tile layers travel one hop along
@@ -381,6 +456,36 @@ class ShardedLBM:
             f_out = jnp.where(solid[None], 0.0, f_out)
             return self._to_storage(f_out)[None]
 
+        def body_fused(f, tbl):
+            from repro.core.backends import nebb_boundary_pass
+            from repro.kernels.stream_collide import (stream_collide_tiles,
+                                                      zero_scratch_row)
+
+            f = f[0]                                      # (Tp, Q, n)
+            if d_cnt > 1:
+                # halo exchange slices whole tile rows — no layout shuffle
+                up = jax.lax.ppermute(f[tbl["su"][0]], "slab", self._perm_up)
+                dn = jax.lax.ppermute(f[tbl["sd"][0]], "slab", self._perm_dn)
+                ru, rum = tbl["ru"][0], tbl["rum"][0]
+                rd, rdm = tbl["rd"][0], tbl["rdm"][0]
+                f = f.at[ru].set(jnp.where(rum[:, None, None], up, f[ru]))
+                f = f.at[rd].set(jnp.where(rdm[:, None, None], dn, f[rd]))
+            out = stream_collide_tiles(
+                f, tbl["types"][0], tbl["nbrs"][0], lat, cfg.collision,
+                a=cfg.a, force=cfg.force, interpret=self.kernel_interpret,
+                mode=cfg.kernel_mode)
+            if "bcg" in tbl:
+                # masked NEBB pass (shared with FusedBackend): re-stream +
+                # rebuild + collide ONLY the boundary tiles, pre-step state
+                out = nebb_boundary_pass(
+                    f, out, lat, cfg.collision, cfg.force,
+                    tuple(spec for _, spec in cfg.boundaries),
+                    tbl["bct"][0], tbl["bcg"][0], tbl["bcm"][:, 0],
+                    tbl["bcs"][0])
+                out = zero_scratch_row(out, tp - 1)  # padded rows hit dummy
+            return out[None]
+
+        body = body_fused if self.fused else body_gather
         step_specs = {k: v for k, v in self._tbl_specs.items()}
 
         def raw_step(f, tbl):
@@ -424,7 +529,7 @@ class ShardedLBM:
         (D, t_pad) marks tiles whose values are authoritative on device d
         (halo + padding excluded).
         """
-        fc = self._to_canonical(self.f)                   # (D, Q, Tp, n)
+        fc = self._canonical_state(self.f)                # (D, Q, Tp, n)
         rho, u = col.macroscopics(jnp.moveaxis(fc, 1, 0), self.lat,
                                   self.cfg.collision.fluid)
         solid = self._tbl_np["solid"]
@@ -433,7 +538,7 @@ class ShardedLBM:
         return rho, u, self._types_np, self.plan.own
 
     def total_mass(self) -> float:
-        fc = self._to_canonical(self.f)
+        fc = self._canonical_state(self.f)
         mask = self._tbl["own_nodes"][:, None]            # (D, 1, Tp, n)
         return float(jnp.sum(jnp.where(mask, fc, 0.0)))
 

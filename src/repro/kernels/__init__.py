@@ -1,3 +1,24 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas kernels for the sparse tiled LBM (paper §4).
+
+* ``collide.py`` / ``ops.collide_tiles`` — collision-only kernel over
+  tile-pair-packed blocks (used by the gather backend's ``use_kernel``).
+* ``stream_collide.py`` — the paper's FUSED stream+collide kernel
+  (Algorithm 2, one instance per tile, scalar-prefetched tileMap); the
+  fused engine backend (``repro.core.backends.FusedBackend``) keeps its
+  state in this kernel's packed (T+1, Q, n) layout persistently.
+* ``flash.py`` — attention kernel for the LM stack (unrelated to LBM).
+
+Kernels run compiled on real accelerators (collision: tpu/gpu; fused:
+tpu only — its scalar prefetch is TPU-specific) and in interpret mode
+elsewhere; see ``ops.default_interpret``.
+"""
+from .ops import collide_tiles, default_interpret, resolve_interpret
+from .stream_collide import (build_neighbor_table, pack_engine_state,
+                             packed_gather_indices, stream_collide_tiles,
+                             unpack_engine_state, zero_scratch_row)
+
+__all__ = [
+    "collide_tiles", "default_interpret", "resolve_interpret",
+    "build_neighbor_table", "pack_engine_state", "packed_gather_indices",
+    "stream_collide_tiles", "unpack_engine_state", "zero_scratch_row",
+]

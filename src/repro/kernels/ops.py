@@ -1,9 +1,18 @@
-"""Jit'd public wrappers around the Pallas kernels.
+"""Jit'd public wrappers around the Pallas kernels + interpret-mode policy.
 
 ``collide_tiles`` accepts the engine's canonical (Q, T, n) layout, packs it
 into the kernel's tile-pair (Q, G, 128) layout (padding with solid slots),
-runs the kernel, and unpacks.  On this CPU container kernels run in
-``interpret=True`` mode; on TPU set ``interpret=False`` (same code path).
+runs the kernel, and unpacks.  The fused stream+collide kernel has no such
+wrapper: the fused engine backend keeps its state in the kernel's packed
+(T+1, Q, n) layout persistently (see ``repro.core.backends``), so nothing
+needs packing per step.
+
+Interpret mode: Pallas kernels run compiled on tpu/gpu and interpreted
+elsewhere (this CPU container).  ``interpret=None`` everywhere means
+"auto": :func:`default_interpret` picks based on ``jax.default_backend()``,
+so a real TPU run never silently falls into the interpreter — and when the
+interpreter IS used for a kernel path, the engine warns once at
+construction (see ``repro.core.engine``).
 """
 from __future__ import annotations
 
@@ -16,6 +25,23 @@ from repro.core import collision as col
 from repro.core.lattice import Lattice
 
 from .collide import LANES, collide_pallas
+
+
+def default_interpret(tpu_only: bool = False) -> bool:
+    """Interpret Pallas kernels unless a real accelerator backend is active.
+
+    ``tpu_only``: the kernel uses TPU-specific Pallas features (scalar
+    prefetch — the fused stream+collide kernel), so only a TPU backend can
+    run it compiled; on gpu it must fall back to the interpreter rather
+    than fail to lower.
+    """
+    compiled_on = ("tpu",) if tpu_only else ("tpu", "gpu")
+    return jax.default_backend() not in compiled_on
+
+
+def resolve_interpret(flag: bool | None, tpu_only: bool = False) -> bool:
+    """Resolve an ``interpret`` tri-state (None = auto) to a bool."""
+    return default_interpret(tpu_only) if flag is None else bool(flag)
 
 
 def _pack(f: jnp.ndarray, solid: jnp.ndarray, block_rows: int):
@@ -43,9 +69,10 @@ def collide_tiles(
     cfg: col.CollisionConfig,
     force=None,
     block_rows: int = 8,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jnp.ndarray:
     q, t, n = f.shape
     fp, sp, m = _pack(f, solid, block_rows)
-    out = collide_pallas(fp, sp, lat, cfg, force, block_rows, interpret)
+    out = collide_pallas(fp, sp, lat, cfg, force, block_rows,
+                         resolve_interpret(interpret))
     return out.reshape(q, -1)[:, :m].reshape(q, t, n)

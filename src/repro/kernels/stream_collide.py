@@ -11,7 +11,8 @@ Data layout: f is (T+1, Q, n) — one contiguous (Q, 64) data block per tile,
 with a SCRATCH tile (all-solid, zero f) at index T; out-of-grid/empty
 neighbours point at it, so half-way bounce-back falls out of the ordinary
 "source is solid" test with no branches (the paper's Algorithm 2 lines
-9-11).
+9-11).  Periodic axes wrap through the neighbour table itself
+(:func:`build_neighbor_table`), so the kernel needs no periodic branches.
 
 Pull geometry: node x pulls f_q from x - e_q, which lies in this tile or in
 one of the D3Q19 linkage neighbours — for DIAGONAL directions an edge/corner
@@ -20,6 +21,13 @@ the kernel loads all 18 linked neighbour blocks (6 faces + 12 edges) once
 and a static per-(direction, node) CASE table picks the source block.  All
 tables are host-built numpy constants shipped as kernel inputs, exactly
 like the paper builds its indices once on CPU.
+
+The kernel computes in the storage dtype (float32 on TPU, float64 for the
+CPU validation runs), so the float64 parity tests against the gather
+backend hold to 1e-12.  The paper's §4.1 kernel variants are supported via
+``mode``: 'full' (stream + collide), 'propagation_only' (stream, no
+collision math), 'rw_only' (read + write each tile's own data block — the
+bandwidth ceiling probe).
 
 Collision reuses the tile-pair collide math (kernels/collide.py) — LBGK is
 pure VPU; LBMRT contracts the 19x19 collision matrix on the MXU.
@@ -38,9 +46,14 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import collision as col
 from repro.core.lattice import Lattice
-from repro.core.tiling import SOLID, Tiling, neighbor_offset_index
+from repro.core.tiling import (NEIGHBOR_OFFSETS, SOLID, Tiling,
+                               neighbor_offset_index)
 
 from .collide import _collide_block
+
+MODES = ("full", "propagation_only", "rw_only")
+
+_PULL_CACHE: dict[tuple, tuple] = {}
 
 
 def _pull_geometry(lat: Lattice, a: int = 4):
@@ -50,6 +63,9 @@ def _pull_geometry(lat: Lattice, a: int = 4):
     offsets is the ordered list of distinct neighbour tile offsets the
     lattice links to, and cases[q, node] = 0 for an in-tile source or
     1 + offsets.index(node's source-tile offset)."""
+    key = (lat.name, a)
+    if key in _PULL_CACHE:
+        return _PULL_CACHE[key]
     n = a ** 3
     idx = np.arange(n)
     x, y, z = idx % a, (idx // a) % a, idx // (a * a)
@@ -68,13 +84,63 @@ def _pull_geometry(lat: Lattice, a: int = 4):
             if off not in offsets:
                 offsets.append(off)
             cases[q, node] = 1 + offsets.index(off)
-    return offsets, perms, cases
+    _PULL_CACHE[key] = (offsets, perms, cases)
+    return _PULL_CACHE[key]
+
+
+def build_neighbor_table(
+    tiling: Tiling, periodic: tuple[bool, bool, bool] = (False, False, False)
+) -> np.ndarray:
+    """Kernel-ready (T, 27) neighbour table: scratch index T for empty or
+    out-of-grid neighbours, periodic axes wrapped through the tile grid.
+
+    Periodic wrap happens at tile granularity, so a periodic axis needs its
+    ORIGINAL extent to be a multiple of the tile edge ``a`` (otherwise the
+    solid padding layer would sit inside the wrap); the gather backend has
+    no such restriction because it wraps per node.
+    """
+    for ax in range(3):
+        if periodic[ax] and tiling.orig_shape[ax] % tiling.a:
+            raise ValueError(
+                f"fused kernel: periodic axis {ax} needs extent % a == 0 "
+                f"(got {tiling.orig_shape[ax]} % {tiling.a})")
+    t = tiling.num_tiles
+    grid = np.array(tiling.tile_grid, np.int64)
+    shifted = (tiling.tile_coords[:, None, :].astype(np.int64)
+               + NEIGHBOR_OFFSETS[None, :, :])                  # (T, 27, 3)
+    in_grid = np.ones(shifted.shape[:2], bool)
+    for ax in range(3):
+        if periodic[ax]:
+            shifted[..., ax] %= grid[ax]
+        else:
+            in_grid &= (shifted[..., ax] >= 0) & (shifted[..., ax] < grid[ax])
+    clamped = np.clip(shifted, 0, grid - 1)
+    nbr = tiling.tile_map[clamped[..., 0], clamped[..., 1], clamped[..., 2]]
+    nbr = np.where(in_grid, nbr, -1)
+    return np.where(nbr < 0, t, nbr).astype(np.int32)
+
+
+def packed_gather_indices(gather_idx: np.ndarray, q: int, t: int,
+                          n: int) -> np.ndarray:
+    """Remap streaming gather indices into the packed (T+1, Q, n) flat space.
+
+    ``gather_idx`` comes from :func:`repro.core.streaming.build_stream_tables`
+    and indexes the canonical per-direction flat layout
+    ``idx = q * (t*n) + tile * n + off``; the packed layout used by the fused
+    kernel flattens as ``idx = tile * (q*n) + q * n + off``.  Only valid for
+    ``layout_scheme='xyz'`` (identity within-tile permutations).
+    """
+    g = gather_idx.astype(np.int64)
+    m = t * n
+    qq, rem = np.divmod(g, m)
+    tile, off = np.divmod(rem, n)
+    return (tile * (q * n) + qq * n + off).astype(np.int32)
 
 
 def make_kernel(lat: Lattice, cfg: col.CollisionConfig, n_offsets: int,
-                force=None):
+                force=None, mode: str = "full"):
     opp = lat.opp
-    mrt = cfg.model == col.LBMRT
+    mrt = cfg.model == col.LBMRT and mode == "full"
 
     def kernel(nb_ref, own_f, own_t, perms_ref, cases_ref, *rest):
         out_ref = rest[-1]
@@ -84,7 +150,7 @@ def make_kernel(lat: Lattice, cfg: col.CollisionConfig, n_offsets: int,
         else:
             a_ref = None
             nbr = rest[:-1]                   # (f_off, t_off) x n_offsets
-        f_own = own_f[0].astype(jnp.float32)  # (Q, n)
+        f_own = own_f[0]                      # (Q, n) — storage dtype
         t_own = own_t[0]                      # (n,)
 
         pulled = [f_own[0]]
@@ -94,7 +160,7 @@ def make_kernel(lat: Lattice, cfg: col.CollisionConfig, n_offsets: int,
             src_f = jnp.take(f_own[q], perm)
             src_t = jnp.take(t_own, perm)
             for c in range(n_offsets):
-                f_nb = nbr[2 * c][0].astype(jnp.float32)
+                f_nb = nbr[2 * c][0]
                 t_nb = nbr[2 * c + 1][0]
                 hit = case == (c + 1)
                 src_f = jnp.where(hit, jnp.take(f_nb[q], perm), src_f)
@@ -103,6 +169,9 @@ def make_kernel(lat: Lattice, cfg: col.CollisionConfig, n_offsets: int,
             pulled.append(jnp.where(bounce, f_own[int(opp[q])], src_f))
         f_in = jnp.stack(pulled)              # (Q, n)
 
+        if mode == "propagation_only":
+            out_ref[0] = f_in.astype(out_ref.dtype)
+            return
         solid_here = t_own == SOLID
         a_mat = a_ref[...] if mrt else None
         f_out = _collide_block(f_in[:, None, :], solid_here[None, :],
@@ -112,20 +181,51 @@ def make_kernel(lat: Lattice, cfg: col.CollisionConfig, n_offsets: int,
     return kernel
 
 
+def _rw_kernel(own_f, out_ref):
+    """paper §4.1 'rw_only' variant: read + write the tile's own block."""
+    out_ref[0] = own_f[0]
+
+
+def zero_scratch_row(f: jnp.ndarray, row: int) -> jnp.ndarray:
+    """Reset the scratch tile row (lowered as dynamic_update_slice, NOT a
+    scatter — the fused hot loop must stay free of gather/scatter ops)."""
+    zeros = jnp.zeros((1,) + f.shape[1:], f.dtype)
+    return jax.lax.dynamic_update_slice(f, zeros, (row,) + (0,) * (f.ndim - 1))
+
+
 def stream_collide_tiles(f, node_types, neighbors, lat: Lattice,
                          cfg: col.CollisionConfig, a: int = 4, force=None,
-                         interpret: bool = True):
+                         interpret: bool | None = None, mode: str = "full"):
     """One fused LBM step over all tiles.
 
     f:          (T+1, Q, n) — scratch tile at index T must be zero
     node_types: (T+1, n) uint8 — scratch tile must be SOLID
     neighbors:  (T, 27) int32 — empty/out-of-grid entries = T (scratch)
-    Returns the post-collision (T+1, Q, n) (scratch row zeroed).
+    mode:       'full' | 'propagation_only' | 'rw_only' (paper §4.1)
+    interpret:  None = auto (interpret unless on tpu — this kernel's scalar
+                prefetch is TPU-specific Pallas and does not lower on gpu)
+    Returns the post-step (T+1, Q, n) (scratch row zeroed).
     """
+    from .ops import resolve_interpret
+
+    assert mode in MODES, mode
+    interpret = resolve_interpret(interpret, tpu_only=True)
     t1, q, n = f.shape
     t = t1 - 1
+
+    if mode == "rw_only":
+        out = pl.pallas_call(
+            _rw_kernel,
+            grid=(t,),
+            in_specs=[pl.BlockSpec((1, q, n), lambda i: (i, 0, 0))],
+            out_specs=pl.BlockSpec((1, q, n), lambda i: (i, 0, 0)),
+            out_shape=jax.ShapeDtypeStruct((t1, q, n), f.dtype),
+            interpret=interpret,
+        )(f)
+        return zero_scratch_row(out, t)
+
     offsets, perms_np, cases_np = _pull_geometry(lat, a)
-    kernel = make_kernel(lat, cfg, len(offsets), force)
+    kernel = make_kernel(lat, cfg, len(offsets), force, mode)
 
     perms = jnp.asarray(perms_np)
     cases = jnp.asarray(cases_np)
@@ -149,10 +249,10 @@ def stream_collide_tiles(f, node_types, neighbors, lat: Lattice,
         in_specs.append(pl.BlockSpec((1, n), t_map))
         operands.extend([f, node_types])
 
-    if cfg.model == col.LBMRT:
+    if cfg.model == col.LBMRT and mode == "full":
         in_specs.append(pl.BlockSpec((q, q), lambda i, nb: (0, 0)))
         operands.append(jnp.asarray(col.collision_matrix_np(lat, cfg.tau),
-                                    jnp.float32))
+                                    f.dtype))
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
@@ -166,7 +266,7 @@ def stream_collide_tiles(f, node_types, neighbors, lat: Lattice,
         out_shape=jax.ShapeDtypeStruct((t1, q, n), f.dtype),
         interpret=interpret,
     )(neighbors, *operands)
-    return out.at[t].set(0.0)
+    return zero_scratch_row(out, t)
 
 
 def pack_engine_state(tiling: Tiling, f_canon, lat: Lattice):

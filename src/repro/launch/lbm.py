@@ -126,8 +126,9 @@ def run_local(args):
     cfg = LBMConfig(
         collision=C.CollisionConfig(model=args.collision, fluid=args.fluid,
                                     tau=args.tau),
-        layout_scheme="paper", dtype=args.dtype, boundaries=bcs,
-        periodic=periodic)
+        layout_scheme="xyz" if args.backend == "fused" else "paper",
+        dtype=args.dtype, boundaries=bcs, periodic=periodic,
+        backend=args.backend)
     n_dev = len(jax.devices())
     if n_dev > 1:
         mesh = jax.make_mesh((n_dev,), ("data",))
@@ -136,14 +137,16 @@ def run_local(args):
     else:
         eng = SparseTiledLBM(g, cfg)
         n_fluid = eng.n_fluid_nodes
-    eng.step(1)  # compile
+    eng.run(args.steps)  # compile the fori_loop + warm
+    jax.block_until_ready(eng.f)
     t0 = time.time()
-    eng.step(args.steps)
+    eng.run(args.steps)  # timed: one dispatch for the whole loop
     jax.block_until_ready(eng.f)
     dt = time.time() - t0
     mflups = n_fluid * args.steps / dt / 1e6
-    print(f"case={args.case} devices={n_dev} fluid={n_fluid:,} "
-          f"steps={args.steps} {dt:.2f}s -> {mflups:.2f} MFLUPS")
+    print(f"case={args.case} backend={args.backend} devices={n_dev} "
+          f"fluid={n_fluid:,} steps={args.steps} {dt:.2f}s "
+          f"-> {mflups:.2f} MFLUPS")
     print(f"mass = {eng.total_mass():.6f}")
 
 
@@ -161,6 +164,8 @@ def main(argv=None):
     ap.add_argument("--fluid", default="incompressible",
                     choices=["incompressible", "quasi_compressible"])
     ap.add_argument("--dtype", default="float32")
+    ap.add_argument("--backend", default="gather",
+                    choices=["gather", "fused"])
     ap.add_argument("--out", default=None)
     args = ap.parse_args(argv)
 

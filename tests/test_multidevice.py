@@ -33,5 +33,9 @@ def test_sharded_lbm_matches_single_device():
     _run("sharded_lbm.py", "SHARDED_OK")
 
 
+def test_sharded_fused_backend_matches_gather():
+    _run("fused_slab.py", "FUSED_SLAB_OK")
+
+
 def test_mini_dryrun_all_families():
     _run("smoke_dryrun.py", "DRYRUN_SMOKE_OK", timeout=1500)
