@@ -47,9 +47,9 @@ class TimedRun:
     """Result of one timed benchmark configuration."""
 
     mflups: float            # kernel-only: fori_loop run(), one dispatch
-    mflups_dispatch: float   # one Python dispatch + jit call per step
-    seconds_per_step: float
-    seconds_per_step_dispatch: float
+    mflups_dispatch: float | None   # one Python dispatch + jit call per step
+    seconds_per_step: float         # (None when measured with dispatch=False)
+    seconds_per_step_dispatch: float | None
     eng: SparseTiledLBM
 
     def __iter__(self):      # allow ``mf, eng = timed_mflups(...)``
@@ -59,20 +59,24 @@ class TimedRun:
 def timed_mflups(geometry, *, mode="full", model="lbgk",
                  fluid="incompressible", layout="paper", dtype="float32",
                  steps=20, warmup=3, boundaries=(), periodic=(False,) * 3,
-                 backend="gather"):
+                 backend="gather", tile_order="zmajor", lattice="D3Q19",
+                 force=None, dispatch=True):
     """Time one engine configuration; returns a :class:`TimedRun`.
 
     ``backend='fused'`` measures the paper's fused Pallas stream+collide
     kernel (forces the kernel's own packed layout, so ``layout`` is
     ignored); ``backend='gather'`` measures the jnp reference path with
-    the requested per-direction storage layout.
+    the requested per-direction storage layout.  ``tile_order`` selects
+    the tile traversal policy (data placement) under measurement.
     """
     cfg = LBMConfig(
+        lattice=lattice,
         collision=C.CollisionConfig(model=model or "lbgk",
                                     fluid=fluid or "incompressible", tau=0.6),
         layout_scheme="xyz" if backend == "fused" else layout,
         dtype=dtype, kernel_mode=mode, backend=backend,
-        boundaries=boundaries, periodic=periodic)
+        boundaries=boundaries, periodic=periodic, tile_order=tile_order,
+        force=force)
     eng = SparseTiledLBM(geometry, cfg)
 
     # kernel-only: everything inside one jitted fori_loop.  Warm with the
@@ -87,17 +91,23 @@ def timed_mflups(geometry, *, mode="full", model="lbgk",
     jax.block_until_ready(eng.f)
     dt_run = (time.perf_counter() - t0) / steps
 
-    # dispatch-included: one Python->jit round-trip per step
-    eng.step(1)
-    jax.block_until_ready(eng.f)
-    t0 = time.perf_counter()
-    eng.step(steps)
-    jax.block_until_ready(eng.f)
-    dt_step = (time.perf_counter() - t0) / steps
+    # dispatch-included: one Python->jit round-trip per step.  Skippable
+    # (``dispatch=False``) because it compiles a SECOND program per
+    # configuration — prohibitive for interpret-mode sweep jobs like the
+    # CI geometry suite.
+    dt_step = None
+    if dispatch:
+        eng.step(1)
+        jax.block_until_ready(eng.f)
+        t0 = time.perf_counter()
+        eng.step(steps)
+        jax.block_until_ready(eng.f)
+        dt_step = (time.perf_counter() - t0) / steps
 
     return TimedRun(
         mflups=eng.n_fluid_nodes / dt_run / 1e6,
-        mflups_dispatch=eng.n_fluid_nodes / dt_step / 1e6,
+        mflups_dispatch=(None if dt_step is None
+                         else eng.n_fluid_nodes / dt_step / 1e6),
         seconds_per_step=dt_run,
         seconds_per_step_dispatch=dt_step,
         eng=eng)

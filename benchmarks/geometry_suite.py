@@ -1,0 +1,171 @@
+"""Geometry benchmark suite — the paper's Tables 6-9 analogues x tile
+ordering x backend.
+
+The paper's headline claim is that a uniform mesh of small tiles PLUS
+careful data placement recovers most of peak bandwidth; this suite finally
+measures the placement half.  Every row pairs performance (MFLUPS,
+kernel-only and dispatch-included) with the structural quantities that
+explain it: tile utilisation eta_t (Eqn 14), porosity, and the locality
+metrics introduced with ``LBMConfig.tile_order`` — mean neighbour
+index distance, cross-tile link fraction, and the cross-tile link distance
+histogram in tile-index space.
+
+Cases: lid-driven cavity (dense reference), duct, random sphere packs at
+two porosities (Table 6), and the body-like vessel / aorta geometries
+(Tables 8/9) that previously existed in ``repro.data.geometry`` but were
+reachable from no benchmark.
+
+    PYTHONPATH=src python -m benchmarks.geometry_suite --quick     # CI-sized
+    PYTHONPATH=src python -m benchmarks.geometry_suite             # paper-sized
+
+Emits ``BENCH_geometry_suite.json``.  CPU numbers (Pallas interpret mode
+for the fused backend) are labelled as such in the meta block and are for
+trajectory tracking, not GPU/TPU comparison — see benchmarks/common.py.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+import warnings
+
+import jax
+
+from benchmarks.common import timed_mflups
+from repro.core.boundary import BoundarySpec
+from repro.core.tiling import TILE_ORDERS
+from repro.data import geometry as geo
+from repro.launch.lbm import _X_FLOW, _Z_FLOW, Case, make_case
+
+BACKENDS = ("gather", "fused")
+
+
+def suite_cases(quick: bool) -> dict:
+    """name -> Case.  Quick sizes keep every geometry under ~100 non-empty
+    tiles so the fused backend stays CI-affordable in interpret mode."""
+    if quick:
+        lid = ((geo.LID, BoundarySpec("velocity", (0, 0, -1),
+                                      velocity=(0.05, 0.0, 0.0))),)
+        return {
+            "cavity": Case(geo.cavity3d(12), lid),
+            "duct": Case(geo.duct(12, 12, 24), _Z_FLOW),
+            "spheres_p0.7": Case(geo.duct_wrap(geo.random_spheres(
+                box=12, porosity=0.7, diameter=6, seed=0), wall=2), _Z_FLOW),
+            "spheres_p0.5": Case(geo.duct_wrap(geo.random_spheres(
+                box=12, porosity=0.5, diameter=6, seed=1), wall=2), _Z_FLOW),
+            "vessel": Case(geo.vessel_aneurysm((32, 24, 24), radius=7.0,
+                                               bulge=8.0), _X_FLOW),
+            "aorta": Case(geo.aorta_coarctation((24, 32, 48), radius=6.0),
+                          _Z_FLOW),
+        }
+    cases = {n: make_case(n) for n in
+             ("cavity", "duct", "spheres", "vessel", "aorta")}
+    cases["spheres_p0.7"] = cases.pop("spheres")
+    cases["spheres_p0.5"] = Case(geo.duct_wrap(geo.random_spheres(
+        box=64, porosity=0.5, diameter=16, seed=1)), _Z_FLOW)
+    return cases
+
+
+def run_suite(cases: dict, orders, backends, steps: int, warmup: int,
+              dtype: str, dispatch: bool = True) -> list:
+    rows = []
+    total = len(cases) * len(orders) * len(backends)
+    print("geometry,tile_order,backend,MFLUPS,MFLUPS_dispatch,eta_t,"
+          "porosity,mean_nbr_index_dist,cross_tile_frac,mean_link_dist")
+    for gname, case in cases.items():
+        for order in orders:
+            for backend in backends:
+                t0 = time.time()
+                res = timed_mflups(
+                    case.geometry, steps=steps, warmup=warmup, dtype=dtype,
+                    boundaries=case.boundaries, periodic=case.periodic,
+                    backend=backend, tile_order=order, lattice=case.lattice,
+                    force=case.force, dispatch=dispatch)
+                eng = res.eng
+                loc = eng.tiling.locality_metrics()
+                loc.pop("tile_order")
+                row = {
+                    "geometry": gname,
+                    "tile_order": order,
+                    "backend": backend,
+                    "mflups": round(res.mflups, 4),
+                    "mflups_dispatch": (None if res.mflups_dispatch is None
+                                        else round(res.mflups_dispatch, 4)),
+                    "seconds_per_step": res.seconds_per_step,
+                    "n_fluid_nodes": eng.n_fluid_nodes,
+                    "num_tiles": eng.tiling.num_tiles,
+                    "tile_utilisation": round(eng.tiling.tile_utilisation, 4),
+                    "porosity": round(eng.tiling.porosity, 4),
+                    **loc,
+                    "cross_tile_frac": round(eng.tables.cross_tile_frac, 4),
+                    "mean_link_distance":
+                        round(eng.tables.mean_link_distance, 2),
+                    "link_distance_hist": eng.tables.link_distance_hist,
+                }
+                rows.append(row)
+                print(f"{gname},{order},{backend},{row['mflups']},"
+                      f"{row['mflups_dispatch']},{row['tile_utilisation']},"
+                      f"{row['porosity']},"
+                      f"{row['mean_neighbor_index_distance']},"
+                      f"{row['cross_tile_frac']},{row['mean_link_distance']}"
+                      f"  [{len(rows)}/{total} {time.time() - t0:.1f}s]")
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI-sized geometries / step counts")
+    ap.add_argument("--steps", type=int, default=None)
+    ap.add_argument("--warmup", type=int, default=1)
+    ap.add_argument("--dtype", default="float32")
+    ap.add_argument("--orders", default=None,
+                    help="comma-separated subset of TILE_ORDERS "
+                         "(default: zmajor,morton_slab quick; all otherwise)")
+    ap.add_argument("--backends", default=",".join(BACKENDS))
+    ap.add_argument("--out", default="BENCH_geometry_suite.json")
+    args = ap.parse_args(argv)
+
+    warnings.simplefilter("ignore", RuntimeWarning)  # interpret-mode notice
+    orders = (args.orders.split(",") if args.orders
+              else ["zmajor", "morton_slab"] if args.quick
+              else list(TILE_ORDERS))
+    assert all(o in TILE_ORDERS for o in orders), orders
+    backends = args.backends.split(",")
+    steps = args.steps or (2 if args.quick else 20)
+
+    cases = suite_cases(args.quick)
+    # quick mode skips the dispatch-included timing: it would compile a
+    # second program per row, which dominates interpret-mode CI runs
+    rows = run_suite(cases, orders, backends, steps, args.warmup, args.dtype,
+                     dispatch=not args.quick)
+
+    # structural guards so CI catches config drift, not just crashes
+    # (guards relax when the user deliberately narrowed the sweep via flags)
+    assert len({r["geometry"] for r in rows}) >= 5
+    assert len({r["tile_order"] for r in rows}) >= min(2, len(orders))
+    assert {r["backend"] for r in rows} >= {"gather", "fused"} or \
+        set(backends) != set(BACKENDS)
+    assert all(r["mflups"] > 0 for r in rows)
+
+    out = {
+        "meta": {
+            "jax_backend": jax.default_backend(),
+            "interpreted_fused": jax.default_backend() not in ("tpu",),
+            "quick": args.quick,
+            "steps": steps,
+            "dtype": args.dtype,
+            "orders": orders,
+            "backends": backends,
+        },
+        "rows": rows,
+    }
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=1)
+    print(f"# geometry suite OK: {len(rows)} rows -> {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

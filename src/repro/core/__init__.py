@@ -7,6 +7,9 @@ Public API:
     CollisionConfig            — collision/fluid model selection
     BoundarySpec               — open boundaries (Zou-He / pressure)
     tile_geometry, Tiling      — host-side tiler (Algorithm 1)
+    TILE_ORDERS                — tile traversal policies (data placement);
+                                 SLAB_COMPATIBLE_ORDERS is the subset the
+                                 slab decomposition (repro.dist) accepts
 """
 from .backends import BACKENDS
 from .boundary import BoundarySpec
@@ -14,11 +17,13 @@ from .collision import CollisionConfig
 from .dense import DenseLBM
 from .engine import LBMConfig, SparseTiledLBM
 from .lattice import d2q9, d3q19, get_lattice
-from .tiling import FLUID, INLET, OUTLET, SOLID, Tiling, tile_geometry
+from .tiling import (FLUID, INLET, OUTLET, SLAB_COMPATIBLE_ORDERS, SOLID,
+                     TILE_ORDERS, Tiling, tile_geometry)
 
 __all__ = [
     "BACKENDS", "BoundarySpec", "CollisionConfig", "DenseLBM", "LBMConfig",
     "SparseTiledLBM", "Tiling", "tile_geometry",
+    "TILE_ORDERS", "SLAB_COMPATIBLE_ORDERS",
     "d2q9", "d3q19", "get_lattice",
     "FLUID", "INLET", "OUTLET", "SOLID",
 ]

@@ -18,6 +18,14 @@ with ``fori_loop`` in ``run``):
 
 Both backends produce identical physics: float64 parity is pinned to 1e-12
 in tests/test_backend_fused.py on all benchmark geometry families.
+
+Tile traversal order (``LBMConfig.tile_order``): every per-tile table a
+backend builds — packed state, the fused kernel's neighbour table, the
+boundary-pass tables — is derived from ``tiling.tile_coords`` /
+``tiling.tile_map`` / ``tables.gather_idx``, never from an assumed z-major
+enumeration, so reordering tiles permutes storage without touching
+physics.  tests/test_tile_order.py pins bitwise (gather) and 1e-12
+(fused) parity across all TILE_ORDERS.
 """
 from __future__ import annotations
 

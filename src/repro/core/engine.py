@@ -51,6 +51,11 @@ class LBMConfig:
         default_factory=col.CollisionConfig
     )
     a: int = 4                                # nodes per tile edge
+    # tile traversal policy: 'zmajor' | 'morton' | 'hilbert' | 'morton_slab'
+    # (repro.core.tiling.TILE_ORDERS).  Physics-neutral; reshapes the
+    # spatial locality of the tile storage order.  ShardedLBM additionally
+    # requires a slab-compatible ordering (zmajor / morton_slab).
+    tile_order: str = "zmajor"
     layout_scheme: str = "xyz"                # 'xyz' | 'paper' | ...
     dtype: str = "float32"
     periodic: tuple[bool, bool, bool] = (False, False, False)
@@ -91,7 +96,8 @@ class SparseTiledLBM:
         assert cfg.backend in BACKENDS, cfg.backend
         self.cfg = cfg
         self.lat = get_lattice(cfg.lattice)
-        self.tiling: Tiling = tile_geometry(node_type, cfg.a)
+        self.tiling: Tiling = tile_geometry(node_type, cfg.a,
+                                            order=cfg.tile_order)
         self.tables = build_stream_tables(
             self.tiling, self.lat, cfg.layout_scheme, cfg.periodic
         )
@@ -115,6 +121,15 @@ class SparseTiledLBM:
         )
         feq = col.equilibrium(rho, u, self.lat, self.cfg.collision.fluid)
         return jnp.where(self._solid[None], 0.0, feq)        # (Q, T, n)
+
+    def reset(self) -> None:
+        """Re-initialise f to the equilibrium state (t = 0).
+
+        Lets callers warm/compile with a full ``run(steps)`` and then time
+        (or measure physics over) EXACTLY ``steps`` iterations from t=0
+        instead of 2x steps (launch.lbm.run_local).
+        """
+        self.f = self.backend.initial_state(self._initial_feq())
 
     # ------------------------------------------------------------------ step
     def step(self, steps: int = 1) -> None:

@@ -22,7 +22,7 @@ import numpy as np
 
 from .lattice import Lattice
 from .layouts import direction_layouts, inverse_permutation, layout_permutation
-from .tiling import SOLID, Tiling
+from .tiling import SOLID, Tiling, pow2_hist
 
 
 @dataclasses.dataclass
@@ -34,6 +34,11 @@ class StreamTables:
     perms: np.ndarray          # (Q, n) int32 canonical -> storage slot
     inv_perms: np.ndarray      # (Q, n) int32 storage slot -> canonical
     cross_tile_frac: float     # fraction of links read from another tile
+    # locality of the cross-tile links in tile-index space: how far apart
+    # in the storage order the two ends of a cross-tile link sit — the
+    # quantity the tile traversal policy (Tiling.order) reshapes
+    mean_link_distance: float = 0.0
+    link_distance_hist: dict = dataclasses.field(default_factory=dict)
 
 
 def build_stream_tables(
@@ -66,6 +71,8 @@ def build_stream_tables(
     gather = np.empty((lat.q, t_cnt, n), dtype=np.int64)
     bounce_links = 0
     cross_links = 0
+    dist_sum = 0
+    dist_buckets = np.zeros(64, dtype=np.int64)   # log2-spaced
     fluid = types != SOLID
 
     for q in range(lat.q):
@@ -94,13 +101,22 @@ def build_stream_tables(
 
         if q > 0:
             bounce_links += int((bounce & fluid).sum())
-            cross_links += int(((src_tile_cl != self_tile) & ~bounce & fluid).sum())
+            cross = (src_tile_cl != self_tile) & ~bounce & fluid
+            cross_links += int(cross.sum())
+            if cross.any():
+                d = np.abs(src_tile_cl - self_tile)[cross]
+                dist_sum += int(d.sum())
+                dist_buckets += np.bincount(
+                    np.floor(np.log2(d)).astype(int), minlength=64)[:64]
 
     total_links = max(1, int(fluid.sum()) * (lat.q - 1))
+    hist = pow2_hist(dist_buckets)
     return StreamTables(
         gather_idx=gather.astype(np.int32),
         bounce_frac=bounce_links / total_links,
         perms=perms.astype(np.int32),
         inv_perms=inv_perms.astype(np.int32),
         cross_tile_frac=cross_links / total_links,
+        mean_link_distance=dist_sum / cross_links if cross_links else 0.0,
+        link_distance_hist=hist,
     )

@@ -5,7 +5,10 @@ cubic tiles of ``a**3`` nodes starting at node (0,0,0); tiles containing only
 solid nodes are dropped.  Products (paper Fig. 2):
 
 * ``tile_coords``  — the ``nonEmptyTiles`` array: (T, 3) tile-grid coordinates
-  of every non-empty tile, ordered z-major (slab friendly for sharding).
+  of every non-empty tile, in the requested :data:`TILE_ORDERS` traversal
+  (``zmajor`` by default; ``morton``/``hilbert`` space-filling curves for
+  locality; ``morton_slab`` = Morton within contiguous z tile-layers, the
+  locality ordering that keeps ``repro.dist`` slab decomposition valid).
 * ``tile_map``     — dense (TX, TY, TZ) int32 matrix: tile index or -1.
 * ``tile_neighbors`` — (T, 27) int32: for each of the 3^3 surrounding tile
   offsets, the neighbour's tile index or -1 (the kernel's local tileMap copy,
@@ -37,6 +40,120 @@ def neighbor_offset_index(dx: int, dy: int, dz: int) -> int:
     return (dx + 1) + 3 * (dy + 1) + 9 * (dz + 1)
 
 
+# ==========================================================================
+# tile traversal orders (the paper's "careful data placement" knob)
+# ==========================================================================
+# "zmajor"      — sort by (z, y, x): slabs of z tile-layers are contiguous.
+# "morton"      — 3-D Morton (Z-curve) bit interleave of (x, y, z).
+# "hilbert"     — 3-D Hilbert curve (Skilling's algorithm): consecutive
+#                 indices are face-adjacent tiles, the best locality.
+# "morton_slab" — (z, morton2d(x, y)): Morton locality WITHIN each z
+#                 tile-layer while z layers stay contiguous, so the slab
+#                 decomposition in repro.dist keeps working.
+TILE_ORDERS = ("zmajor", "morton", "hilbert", "morton_slab")
+# orderings that keep runs of z tile-layers contiguous (dist.SlabPlan)
+SLAB_COMPATIBLE_ORDERS = ("zmajor", "morton_slab")
+
+
+def _spread_bits(v: np.ndarray, bits: int, stride: int) -> np.ndarray:
+    """Insert ``stride - 1`` zero bits between the low ``bits`` bits of v."""
+    v = v.astype(np.uint64)
+    out = np.zeros_like(v)
+    one = np.uint64(1)
+    for b in range(bits):
+        out |= ((v >> np.uint64(b)) & one) << np.uint64(stride * b)
+    return out
+
+
+def morton_key_3d(x, y, z, bits: int) -> np.ndarray:
+    """Z-curve key: bit b of x/y/z lands at position 3b / 3b+1 / 3b+2."""
+    return (_spread_bits(x, bits, 3)
+            | (_spread_bits(y, bits, 3) << np.uint64(1))
+            | (_spread_bits(z, bits, 3) << np.uint64(2)))
+
+
+def morton_key_2d(x, y, bits: int) -> np.ndarray:
+    return _spread_bits(x, bits, 2) | (_spread_bits(y, bits, 2) << np.uint64(1))
+
+
+def hilbert_key_3d(coords: np.ndarray, bits: int) -> np.ndarray:
+    """3-D Hilbert-curve distance of integer points (vectorised).
+
+    Skilling's AxesToTranspose (J. Skilling, "Programming the Hilbert
+    curve", 2004) followed by an MSB-first bit interleave of the transposed
+    axes.  Consecutive keys on a full 2^bits cube are face-adjacent cells.
+    """
+    one = np.uint64(1)
+    x = [coords[:, i].astype(np.uint64) for i in range(3)]
+    # inverse undo of excess work
+    q = one << np.uint64(bits - 1)
+    while q > one:
+        p = q - one
+        for i in range(3):
+            hi = (x[i] & q) != 0
+            if i == 0:
+                x[0] = np.where(hi, x[0] ^ p, x[0])
+            else:
+                t = (x[0] ^ x[i]) & p
+                x[0] = np.where(hi, x[0] ^ p, x[0] ^ t)
+                x[i] = np.where(hi, x[i], x[i] ^ t)
+        q >>= one
+    # Gray encode
+    for i in range(1, 3):
+        x[i] ^= x[i - 1]
+    t = np.zeros_like(x[0])
+    q = one << np.uint64(bits - 1)
+    while q > one:
+        t = np.where((x[2] & q) != 0, t ^ (q - one), t)
+        q >>= one
+    for i in range(3):
+        x[i] ^= t
+    # interleave the transposed axes MSB-first: x[0] carries the top bit
+    key = np.zeros_like(x[0])
+    for b in range(bits - 1, -1, -1):
+        for i in range(3):
+            key = (key << one) | ((x[i] >> np.uint64(b)) & one)
+    return key
+
+
+def pow2_hist(counts: np.ndarray) -> dict:
+    """Format per-log2-bucket counts as ``{"1": n, "2-3": n, "4-7": n}``
+    (JSON-friendly; bucket k covers distances in [2^k, 2^(k+1)))."""
+    out = {}
+    for k, c in enumerate(counts):
+        if not c:
+            continue
+        lo, hi = 2 ** k, 2 ** (k + 1) - 1
+        out[str(lo) if lo == hi else f"{lo}-{hi}"] = int(c)
+    return out
+
+
+def tile_order_permutation(coords: np.ndarray, order: str) -> np.ndarray:
+    """Permutation taking z-major-sorted tile coords into ``order``.
+
+    ``coords``: (T, 3) int tile-grid coordinates, pre-sorted z-major.  The
+    returned permutation is deterministic for every policy; for
+    ``morton_slab`` the order within one z tile-layer depends only on
+    (x, y), which is what lets ``repro.dist`` slice identical halo
+    tile-rows on neighbouring devices.
+    """
+    if order == "zmajor":
+        return np.arange(len(coords), dtype=np.int64)
+    if order not in TILE_ORDERS:
+        raise ValueError(
+            f"unknown tile order {order!r}; expected one of {TILE_ORDERS}")
+    x = coords[:, 0].astype(np.uint64)
+    y = coords[:, 1].astype(np.uint64)
+    z = coords[:, 2].astype(np.uint64)
+    bits = max(1, int(coords.max(initial=0)).bit_length())
+    if order == "morton":
+        return np.argsort(morton_key_3d(x, y, z, bits), kind="stable")
+    if order == "hilbert":
+        return np.argsort(hilbert_key_3d(coords, bits), kind="stable")
+    # morton_slab: z layer is the primary key, 2-D Morton within the layer
+    return np.lexsort((morton_key_2d(x, y, bits), z))
+
+
 @dataclasses.dataclass
 class Tiling:
     a: int                       # nodes per tile edge
@@ -47,6 +164,7 @@ class Tiling:
     tile_map: np.ndarray         # (TX, TY, TZ) int32
     tile_neighbors: np.ndarray   # (T, 27) int32
     node_types: np.ndarray       # (T, a^3) uint8, XYZ order within tile
+    order: str = "zmajor"        # tile traversal policy (TILE_ORDERS)
 
     # ---- statistics (paper §3.3) ------------------------------------
     @property
@@ -85,6 +203,43 @@ class Tiling:
             return float("inf")
         return (2.0 * q * n_d + n_t) / (eta * q * n_d) - 1.0
 
+    # ---- locality diagnostics (data-placement half of the paper) -----
+    def neighbor_index_distances(self) -> np.ndarray:
+        """|neighbour tile index - own index| over every populated
+        neighbour-table link (self offset excluded).
+
+        Small distances mean linked tiles sit close in the storage order —
+        the knob the tile traversal policy (``order``) turns.
+        """
+        own = np.arange(self.num_tiles, dtype=np.int64)[:, None]
+        nbr = self.tile_neighbors.astype(np.int64)
+        valid = nbr >= 0
+        valid[:, neighbor_offset_index(0, 0, 0)] = False
+        return np.abs(nbr - own)[valid]
+
+    def mean_neighbor_index_distance(self) -> float:
+        d = self.neighbor_index_distances()
+        return float(d.mean()) if d.size else 0.0
+
+    def neighbor_index_distance_hist(self) -> dict:
+        """Power-of-two histogram of neighbour index distances:
+        ``{"1": n, "2-3": n, "4-7": n, ...}`` (JSON-friendly)."""
+        d = self.neighbor_index_distances()
+        if not d.size:
+            return {}
+        buckets = np.floor(np.log2(np.maximum(d, 1))).astype(int)
+        return pow2_hist(np.bincount(buckets))
+
+    def locality_metrics(self) -> dict:
+        """JSON-ready placement summary (benchmarks/geometry_suite.py)."""
+        return {
+            "tile_order": self.order,
+            "mean_neighbor_index_distance":
+                round(self.mean_neighbor_index_distance(), 2),
+            "neighbor_index_distance_hist":
+                self.neighbor_index_distance_hist(),
+        }
+
     def node_coords(self) -> np.ndarray:
         """Global (x, y, z) for every (tile, node) slot — (T, a^3, 3) int32."""
         a = self.a
@@ -94,11 +249,15 @@ class Tiling:
         return self.tile_coords[:, None, :] * a + local[None, :, :]
 
 
-def tile_geometry(node_type: np.ndarray, a: int = 4) -> Tiling:
+def tile_geometry(node_type: np.ndarray, a: int = 4,
+                  order: str = "zmajor") -> Tiling:
     """Cover ``node_type`` (X, Y, Z) with a^3 tiles, dropping all-solid tiles.
 
     The paper's Algorithm 1, vectorised.  Geometry is padded with SOLID up to
-    multiples of ``a``.
+    multiples of ``a``.  ``order`` selects the traversal policy assigning
+    tile indices (:data:`TILE_ORDERS`); everything downstream (tile_map,
+    neighbour tables, streaming tables) is derived from the ordered
+    ``tile_coords``, so the choice is physics-neutral by construction.
     """
     assert node_type.ndim == 3, "node_type must be (Nx, Ny, Nz)"
     node_type = np.ascontiguousarray(node_type.astype(np.uint8))
@@ -116,9 +275,10 @@ def tile_geometry(node_type: np.ndarray, a: int = 4) -> Tiling:
 
     non_empty = (blocks != SOLID).any(axis=-1)  # (tx, ty, tz)
 
-    # z-major ordering of non-empty tiles (slabs along z stay contiguous)
+    # z-major enumeration of non-empty tiles, then the requested traversal
     coords = np.argwhere(non_empty.transpose(2, 1, 0))  # (T, [z, y, x])
     coords = coords[:, ::-1].astype(np.int32)           # (T, [x, y, z])
+    coords = np.ascontiguousarray(coords[tile_order_permutation(coords, order)])
 
     tile_map = np.full((tx, ty, tz), -1, dtype=np.int32)
     tile_map[coords[:, 0], coords[:, 1], coords[:, 2]] = np.arange(
@@ -148,6 +308,7 @@ def tile_geometry(node_type: np.ndarray, a: int = 4) -> Tiling:
         tile_map=tile_map,
         tile_neighbors=neigh,
         node_types=types.astype(np.uint8),
+        order=order,
     )
 
 
@@ -159,7 +320,11 @@ def untile(tiling: Tiling, values: np.ndarray, fill=0.0) -> np.ndarray:
     a = tiling.a
     nx, ny, nz = tiling.shape
     lead = values.shape[:-2]
-    out = np.full(lead + (nx, ny, nz), fill, dtype=values.dtype)
+    # promote so e.g. integer values + fill=np.nan cannot silently truncate
+    # NaN into a garbage integer (np.result_type treats python scalars as
+    # weak, so float values keep their dtype for any float fill)
+    out_dtype = np.result_type(values.dtype, fill)
+    out = np.full(lead + (nx, ny, nz), fill, dtype=out_dtype)
     coords = tiling.node_coords()  # (T, a^3, 3)
     out[..., coords[..., 0], coords[..., 1], coords[..., 2]] = values
     return out

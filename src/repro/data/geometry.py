@@ -144,12 +144,17 @@ def vessel_aneurysm(
     # spherical bulge (the aneurysm) near the middle of the vessel
     mid = pts[len(t) // 2] + np.array([0.0, radius + bulge * 0.5, 0.0])
     _tube(g, mid[None, :], np.array([bulge]))
-    # open the ends along x
+    # open the ends along x; BOTH end-adjacent planes carry the same
+    # clamp so the inlet and outlet rims stay symmetric by construction
+    # (a guard, not a behaviour change today: the carve above only writes
+    # FLUID into SOLID, so non-fluid cells on these planes are already
+    # SOLID — the clamp keeps that true if carving ever grows node types)
     fluid0 = g[1, :, :] == FLUID
     g[0, :, :] = np.where(fluid0, INLET, SOLID)
     g[1, :, :] = np.where(fluid0, g[1, :, :], SOLID)
     fl = g[-2, :, :] == FLUID
     g[-1, :, :] = np.where(fl, OUTLET, SOLID)
+    g[-2, :, :] = np.where(fl, g[-2, :, :], SOLID)
     return g
 
 

@@ -1,8 +1,10 @@
 """Slab-decomposed multi-device LBM — the paper's sparse tiled engine
 scaled over a device mesh axis.
 
-The tiler orders ``Tiling.tile_coords`` z-major precisely so that
-contiguous runs of z tile-layers form slabs.  :func:`make_slab_plan` cuts
+The tiler orders ``Tiling.tile_coords`` with z tile-layers contiguous
+(``tile_order`` 'zmajor' or 'morton_slab' — the slab-compatible subset of
+``repro.core.tiling.TILE_ORDERS``) precisely so that contiguous runs of z
+tile-layers form slabs.  :func:`make_slab_plan` cuts
 the tile-layer axis into ``n_dev`` contiguous slabs balanced by fluid-node
 count; each device gets its OWN tile layers plus one replicated HALO
 tile-layer per cut face (streaming reaches one node, so one a-thick tile
@@ -47,7 +49,8 @@ from repro.core.engine import LBMConfig, _resolve_interpret
 from repro.core.boundary import apply_open_boundary
 from repro.core.lattice import get_lattice
 from repro.core.streaming import build_stream_tables
-from repro.core.tiling import SOLID, Tiling, tile_geometry
+from repro.core.tiling import (SLAB_COMPATIBLE_ORDERS, SOLID, Tiling,
+                               tile_geometry)
 
 
 # ==========================================================================
@@ -75,8 +78,12 @@ def balanced_layer_partition(weights: np.ndarray, n_dev: int):
 
 
 def _tiles_at_layer(t: Tiling, layer: int) -> np.ndarray:
-    """Local tile ids of one z tile-layer (z-major order => (y, x) sorted,
-    identical on every device that holds the layer)."""
+    """Local tile ids of one z tile-layer.
+
+    For every slab-compatible ``tile_order`` the order WITHIN a layer is a
+    pure function of (x, y) — (y, x)-sorted for 'zmajor', 2-D Morton for
+    'morton_slab' — so two devices that both hold the layer enumerate its
+    tiles identically and halo send/recv lists line up element-wise."""
     return np.nonzero(t.tile_coords[:, 2] == layer)[0].astype(np.int32)
 
 
@@ -95,6 +102,8 @@ class SlabPlan:
     t_pad: int                             # t_max + 1 (last slot = dummy)
     n_fluid_own: int                       # owned non-solid nodes (global)
     periodic_z: bool
+    tile_order: str = "zmajor"             # slab-compatible traversal
+    tile_utilisation: float = 0.0          # global eta_t (Eqn 14)
 
     @property
     def nodes_per_tile(self) -> int:
@@ -118,10 +127,22 @@ class SlabPlan:
 
 
 def make_slab_plan(node_type: np.ndarray, a: int, n_dev: int,
-                   periodic_z: bool = False) -> SlabPlan:
-    """Slab-decompose a dense geometry into ``n_dev`` z slabs of tiles."""
+                   periodic_z: bool = False,
+                   tile_order: str = "zmajor") -> SlabPlan:
+    """Slab-decompose a dense geometry into ``n_dev`` z slabs of tiles.
+
+    ``tile_order`` must keep z tile-layers contiguous (SLAB_COMPATIBLE_
+    ORDERS): global space-filling orders ('morton', 'hilbert') interleave
+    layers, which would break both the contiguous-slab invariant and the
+    halo tile-row alignment between neighbouring devices.
+    """
+    if tile_order not in SLAB_COMPATIBLE_ORDERS:
+        raise ValueError(
+            f"tile_order {tile_order!r} is not slab-compatible; the slab "
+            f"decomposition needs one of {SLAB_COMPATIBLE_ORDERS} "
+            "(use 'morton_slab' for in-layer locality)")
     node_type = np.ascontiguousarray(node_type.astype(np.uint8))
-    g_tiling = tile_geometry(node_type, a)
+    g_tiling = tile_geometry(node_type, a, order=tile_order)
     tz = g_tiling.tile_grid[2]
     wrap = periodic_z and n_dev > 1
     if wrap:
@@ -156,7 +177,7 @@ def make_slab_plan(node_type: np.ndarray, a: int, n_dev: int,
                           (0, (g_hi - g_lo) * a - sub.shape[2])),
                     constant_values=SOLID)
             z0 = zl - g_lo
-        local_tilings.append(tile_geometry(sub, a))
+        local_tilings.append(tile_geometry(sub, a, order=tile_order))
         own_z0.append(z0)
 
     t_max = max(t.num_tiles for t in local_tilings)
@@ -177,7 +198,8 @@ def make_slab_plan(node_type: np.ndarray, a: int, n_dev: int,
                     layer_of_dev=layer_of_dev, own_z0=own_z0,
                     local_tilings=local_tilings, own=own,
                     t_max=t_max, t_pad=t_pad, n_fluid_own=n_fluid_own,
-                    periodic_z=bool(periodic_z))
+                    periodic_z=bool(periodic_z), tile_order=tile_order,
+                    tile_utilisation=g_tiling.tile_utilisation)
 
 
 # ==========================================================================
@@ -213,7 +235,8 @@ class ShardedLBM:
         self.mesh = Mesh(devs.reshape(n_slab, -1), ("slab", "repl"))
 
         self.plan = make_slab_plan(node_type, cfg.a, n_slab,
-                                   periodic_z=cfg.periodic[2])
+                                   periodic_z=cfg.periodic[2],
+                                   tile_order=cfg.tile_order)
         self._build_tables()
         self._build_step()
         self.f = None
@@ -496,6 +519,10 @@ class ShardedLBM:
 
         self._raw_step = raw_step
         self._step_fn = jax.jit(raw_step, donate_argnums=0)
+
+    def reset(self) -> None:
+        """Re-initialise f to the equilibrium state (t = 0)."""
+        self.f = jax.device_put(self._initial_state(), self._f_sharding)
 
     def step(self, steps: int = 1) -> None:
         for _ in range(steps):

@@ -15,6 +15,7 @@ assigned LM architectures).
     PYTHONPATH=src python -m repro.launch.lbm --dryrun --mesh both
 """
 import argparse
+import dataclasses
 import json
 import sys
 import time
@@ -26,7 +27,7 @@ import numpy as np
 from repro.core import collision as C
 from repro.core.boundary import BoundarySpec
 from repro.core.engine import LBMConfig, SparseTiledLBM
-from repro.core.tiling import INLET, OUTLET
+from repro.core.tiling import INLET, OUTLET, TILE_ORDERS
 from repro.data import geometry as geo
 from repro.dist.lbm import ShardedLBM
 from repro.launch.mesh import make_production_mesh, mesh_chip_count
@@ -34,26 +35,62 @@ from repro.roofline.analysis import HBM_BW, ICI_BW, PEAK_FLOPS
 from repro.roofline.hlo_cost import analyze_hlo
 
 
-def make_case(name: str, scale: int = 1):
+@dataclasses.dataclass
+class Case:
+    """A runnable scenario: geometry + boundary conditions + engine knobs."""
+
+    geometry: np.ndarray
+    boundaries: tuple = ()
+    periodic: tuple = (False, False, False)
+    lattice: str = "D3Q19"
+    force: tuple | None = None
+
+
+_Z_FLOW = ((INLET, BoundarySpec("velocity", (0, 0, 1),
+                                velocity=(0, 0, 0.02))),
+           (OUTLET, BoundarySpec("pressure", (0, 0, -1), rho=1.0)))
+_X_FLOW = ((INLET, BoundarySpec("velocity", (1, 0, 0),
+                                velocity=(0.02, 0, 0))),
+           (OUTLET, BoundarySpec("pressure", (-1, 0, 0), rho=1.0)))
+
+CASES = ("cavity", "duct", "spheres", "vessel", "aorta", "channel2d")
+
+
+def make_case(name: str, scale: int = 1) -> Case:
+    """Every geometry generator in ``repro.data.geometry`` is reachable here
+    (and therefore from the CLI and benchmarks/geometry_suite.py)."""
     if name == "cavity":
-        g = geo.cavity3d(48 * scale)
-        bcs = ((geo.LID, BoundarySpec("velocity", (0, 0, -1),
-                                      velocity=(0.05, 0.0, 0.0))),)
-        return g, bcs, (False, False, False)
+        return Case(
+            geo.cavity3d(48 * scale),
+            ((geo.LID, BoundarySpec("velocity", (0, 0, -1),
+                                    velocity=(0.05, 0.0, 0.0))),))
     if name == "duct":
         g = geo.duct(24 * scale, 24 * scale, 96 * scale)
         bcs = ((INLET, BoundarySpec("velocity", (0, 0, 1),
                                     velocity=(0, 0, 0.05))),
                (OUTLET, BoundarySpec("pressure", (0, 0, -1), rho=1.0)))
-        return g, bcs, (False, False, False)
+        return Case(g, bcs)
     if name == "spheres":
-        g = geo.duct_wrap(
-            geo.random_spheres(box=64 * scale, porosity=0.7, diameter=16))
-        bcs = ((INLET, BoundarySpec("velocity", (0, 0, 1),
-                                    velocity=(0, 0, 0.02))),
-               (OUTLET, BoundarySpec("pressure", (0, 0, -1), rho=1.0)))
-        return g, bcs, (False, False, False)
-    raise ValueError(name)
+        return Case(geo.duct_wrap(
+            geo.random_spheres(box=64 * scale, porosity=0.7, diameter=16)),
+            _Z_FLOW)
+    if name == "vessel":
+        # aneurysm-like curved vessel, inlet/outlet on the x faces; the
+        # radius must reach the x=1 plane (tube centreline starts at x=8)
+        return Case(geo.vessel_aneurysm(
+            (64 * scale, 48 * scale, 48 * scale),
+            radius=8.0 * scale, bulge=12.0 * scale), _X_FLOW)
+    if name == "aorta":
+        # arched tube with a coarctation pinch, inlet/outlet on the z faces
+        return Case(geo.aorta_coarctation(
+            (48 * scale, 64 * scale, 96 * scale), radius=9.0 * scale),
+            _Z_FLOW)
+    if name == "channel2d":
+        # body-force-driven D2Q9 Poiseuille channel, periodic along x
+        return Case(geo.channel2d(32 * scale, 32 * scale),
+                    periodic=(True, False, True), lattice="D2Q9",
+                    force=(1e-5, 0.0, 0.0))
+    raise ValueError(f"unknown case {name!r}; expected one of {CASES}")
 
 
 def dryrun(multi_pod: bool, collision: str = "lbgk",
@@ -65,14 +102,14 @@ def dryrun(multi_pod: bool, collision: str = "lbgk",
     # production-scale geometry: a long duct with >= `slabs` z tile-layers;
     # the "model" axis is left for a second-level decomposition (future
     # work: 2-D slab grid); slab count 16/32 matches pod x data.
-    g, bcs, periodic = make_case("duct", scale=1)
+    case = make_case("duct", scale=1)
     # deepen z so every slab holds >= 2 tile layers
-    reps = max(1, (slabs * 2 * 4) // g.shape[2] + 1)
-    g = np.concatenate([g] * reps, axis=2)
+    reps = max(1, (slabs * 2 * 4) // case.geometry.shape[2] + 1)
+    g = np.concatenate([case.geometry] * reps, axis=2)
     cfg = LBMConfig(
         collision=C.CollisionConfig(model=collision, fluid=fluid, tau=0.6),
-        layout_scheme="paper", dtype="float32", boundaries=bcs,
-        periodic=periodic)
+        layout_scheme="paper", dtype="float32", boundaries=case.boundaries,
+        periodic=case.periodic)
     eng = ShardedLBM(g, cfg, mesh, axis=axis, dryrun=True)
     t0 = time.time()
     lowered = eng.lower_step()
@@ -96,7 +133,7 @@ def dryrun(multi_pod: bool, collision: str = "lbgk",
         "chips": chips, "slabs": eng.plan.n_dev,
         "geometry": list(g.shape),
         "fluid_nodes": n_own,
-        "tile_utilisation": None,
+        "tile_utilisation": round(eng.plan.tile_utilisation, 4),
         "flops_per_device": hc.flops,
         "bytes_per_device": hc.bytes,
         "coll_bytes_per_device": hc.collective_bytes,
@@ -122,32 +159,45 @@ def dryrun(multi_pod: bool, collision: str = "lbgk",
 
 
 def run_local(args):
-    g, bcs, periodic = make_case(args.case, args.scale)
+    case = make_case(args.case, args.scale)
     cfg = LBMConfig(
+        lattice=case.lattice,
         collision=C.CollisionConfig(model=args.collision, fluid=args.fluid,
                                     tau=args.tau),
         layout_scheme="xyz" if args.backend == "fused" else "paper",
-        dtype=args.dtype, boundaries=bcs, periodic=periodic,
-        backend=args.backend)
+        dtype=args.dtype, boundaries=case.boundaries, periodic=case.periodic,
+        force=case.force, backend=args.backend, tile_order=args.order)
     n_dev = len(jax.devices())
-    if n_dev > 1:
+    # a case is slab-decomposable only if every device can own >= 1 z
+    # tile-layer (2 with a wrapped periodic-z halo) — channel2d, for one,
+    # is a single tile layer thick and must run single-device
+    tz = -(-case.geometry.shape[2] // cfg.a)
+    sharded = n_dev > 1 and tz >= n_dev * (2 if case.periodic[2] else 1)
+    if n_dev > 1 and not sharded:
+        print(f"case={args.case}: {tz} z tile-layer(s) cannot feed "
+              f"{n_dev} slabs; running single-device")
+    if sharded:
         mesh = jax.make_mesh((n_dev,), ("data",))
-        eng = ShardedLBM(g, cfg, mesh)
+        eng = ShardedLBM(case.geometry, cfg, mesh)
         n_fluid = eng.plan.n_fluid_own
+        util = eng.plan.tile_utilisation
     else:
-        eng = SparseTiledLBM(g, cfg)
+        eng = SparseTiledLBM(case.geometry, cfg)
         n_fluid = eng.n_fluid_nodes
+        util = eng.tiling.tile_utilisation
     eng.run(args.steps)  # compile the fori_loop + warm
     jax.block_until_ready(eng.f)
+    eng.reset()          # back to t=0: the timed run IS the reported physics
     t0 = time.time()
     eng.run(args.steps)  # timed: one dispatch for the whole loop
     jax.block_until_ready(eng.f)
     dt = time.time() - t0
     mflups = n_fluid * args.steps / dt / 1e6
-    print(f"case={args.case} backend={args.backend} devices={n_dev} "
-          f"fluid={n_fluid:,} steps={args.steps} {dt:.2f}s "
-          f"-> {mflups:.2f} MFLUPS")
-    print(f"mass = {eng.total_mass():.6f}")
+    print(f"case={args.case} backend={args.backend} order={args.order} "
+          f"devices={n_dev if sharded else 1} fluid={n_fluid:,} "
+          f"eta_t={util:.3f} "
+          f"steps={args.steps} {dt:.2f}s -> {mflups:.2f} MFLUPS")
+    print(f"mass = {eng.total_mass():.6f} after {args.steps} steps")
 
 
 def main(argv=None):
@@ -155,9 +205,10 @@ def main(argv=None):
     ap.add_argument("--dryrun", action="store_true")
     ap.add_argument("--mesh", choices=["single", "multi", "both"],
                     default="both")
-    ap.add_argument("--case", default="duct",
-                    choices=["cavity", "duct", "spheres"])
+    ap.add_argument("--case", default="duct", choices=list(CASES))
     ap.add_argument("--scale", type=int, default=1)
+    ap.add_argument("--order", default="zmajor", choices=list(TILE_ORDERS),
+                    help="tile traversal policy (data placement)")
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--tau", type=float, default=0.6)
     ap.add_argument("--collision", default="lbgk", choices=["lbgk", "lbmrt"])

@@ -46,6 +46,43 @@ def test_tile_untile_roundtrip(seed):
         dense, [(0, t.shape[i] - dense.shape[i]) for i in range(3)])[fluid])
 
 
+def test_untile_integer_values_nan_fill_promotes():
+    """Bugfix: integer values + float fill (e.g. the default NaN of
+    fields_dense) must promote the output dtype instead of silently
+    truncating NaN to a garbage integer."""
+    g = np.zeros((8, 8, 8), np.uint8)
+    g[:4, :4, :4] = FLUID                    # one tile of 8: empties exist
+    t = tile_geometry(g, a=4)
+    vals = np.arange(t.num_tiles * 64, dtype=np.int32).reshape(-1, 64)
+    out = untile(t, vals, fill=np.nan)
+    assert out.dtype == np.float64
+    assert np.isnan(out).sum() == 8 ** 3 - 4 ** 3
+    assert np.array_equal(out[:4, :4, :4].ravel(order="F"),
+                          vals.astype(np.float64)[0])
+    # integer fill keeps the integer dtype (no accidental promotion)
+    out_i = untile(t, vals, fill=-1)
+    assert out_i.dtype == vals.dtype and (out_i == -1).sum() == 448
+    # float values keep their dtype for any float fill (weak promotion)
+    out_f = untile(t, vals.astype(np.float32), fill=np.nan)
+    assert out_f.dtype == np.float32
+
+
+def test_vessel_inlet_outlet_symmetry():
+    """Bugfix: vessel_aneurysm clamps BOTH end-adjacent planes, so the
+    inlet and outlet faces open onto identical fluid footprints."""
+    from repro.core.tiling import INLET, OUTLET
+    from repro.data.geometry import vessel_aneurysm
+
+    g = vessel_aneurysm((64, 48, 48), radius=8.0, bulge=12.0)
+    assert (g[0] == INLET).any() and (g[-1] == OUTLET).any()
+    # the open face mirrors its adjacent plane's non-solid footprint
+    assert np.array_equal(g[0] == INLET, g[1] != SOLID)
+    assert np.array_equal(g[-1] == OUTLET, g[-2] != SOLID)
+    # no stray non-fluid rim next to either open face
+    assert set(np.unique(g[1])) <= {SOLID, FLUID}
+    assert set(np.unique(g[-2])) <= {SOLID, FLUID}
+
+
 def test_overhead_formulas():
     """Eqn 15/16 at known utilisation."""
     g = np.zeros((8, 8, 8), np.uint8)
