@@ -51,6 +51,15 @@ class TimedRun:
     seconds_per_step: float         # (None when measured with dispatch=False)
     seconds_per_step_dispatch: float | None
     eng: SparseTiledLBM
+    # achieved bandwidth estimate against the paper's Eqn (10) MINIMUM
+    # traffic — bytes_moved = 2 * Q * n_fluid * dtype_size per step — the
+    # utilisation metric behind the paper's >70%-of-peak claim.  Divide by
+    # the device's peak GB/s to get the utilisation fraction.
+    bandwidth_gbs: float = 0.0
+    # modelled bytes per node update: actual tile storage traffic (Eqn 10
+    # scaled by the solid slots in tiles) + the indirection tables the
+    # step's streaming loads, per fluid node
+    model_bytes_per_node: float = 0.0
 
     def __iter__(self):      # allow ``mf, eng = timed_mflups(...)``
         return iter((self.mflups, self.eng))
@@ -60,14 +69,17 @@ def timed_mflups(geometry, *, mode="full", model="lbgk",
                  fluid="incompressible", layout="paper", dtype="float32",
                  steps=20, warmup=3, boundaries=(), periodic=(False,) * 3,
                  backend="gather", tile_order="zmajor", lattice="D3Q19",
-                 force=None, dispatch=True):
+                 force=None, dispatch=True, node_order="canonical",
+                 split_stream=False):
     """Time one engine configuration; returns a :class:`TimedRun`.
 
     ``backend='fused'`` measures the paper's fused Pallas stream+collide
     kernel (forces the kernel's own packed layout, so ``layout`` is
     ignored); ``backend='gather'`` measures the jnp reference path with
-    the requested per-direction storage layout.  ``tile_order`` selects
-    the tile traversal policy (data placement) under measurement.
+    the requested per-direction storage layout.  ``tile_order`` /
+    ``node_order`` select the data-placement policies under measurement;
+    ``split_stream`` swaps the gather backend's monolithic (Q, T, n) index
+    table for the split-phase interior/frontier tables.
     """
     cfg = LBMConfig(
         lattice=lattice,
@@ -76,7 +88,7 @@ def timed_mflups(geometry, *, mode="full", model="lbgk",
         layout_scheme="xyz" if backend == "fused" else layout,
         dtype=dtype, kernel_mode=mode, backend=backend,
         boundaries=boundaries, periodic=periodic, tile_order=tile_order,
-        force=force)
+        force=force, node_order=node_order, split_stream=split_stream)
     eng = SparseTiledLBM(geometry, cfg)
 
     # kernel-only: everything inside one jitted fori_loop.  Warm with the
@@ -104,10 +116,17 @@ def timed_mflups(geometry, *, mode="full", model="lbgk",
         jax.block_until_ready(eng.f)
         dt_step = (time.perf_counter() - t0) / steps
 
+    # paper Eqn (10): the minimum traffic is one read + one write of every
+    # fluid node's Q populations per step
+    min_bytes = 2 * eng.lat.q * eng.n_fluid_nodes * eng.dtype.itemsize
     return TimedRun(
         mflups=eng.n_fluid_nodes / dt_run / 1e6,
         mflups_dispatch=(None if dt_step is None
                          else eng.n_fluid_nodes / dt_step / 1e6),
         seconds_per_step=dt_run,
         seconds_per_step_dispatch=dt_step,
-        eng=eng)
+        eng=eng,
+        bandwidth_gbs=min_bytes / dt_run / 1e9,
+        model_bytes_per_node=(eng.bytes_per_step()
+                              + eng.index_bytes_per_step())
+        / max(1, eng.n_fluid_nodes))

@@ -1,14 +1,18 @@
 """Geometry benchmark suite — the paper's Tables 6-9 analogues x tile
-ordering x backend.
+ordering x node ordering x backend x streaming mode.
 
 The paper's headline claim is that a uniform mesh of small tiles PLUS
 careful data placement recovers most of peak bandwidth; this suite finally
 measures the placement half.  Every row pairs performance (MFLUPS,
-kernel-only and dispatch-included) with the structural quantities that
-explain it: tile utilisation eta_t (Eqn 14), porosity, and the locality
-metrics introduced with ``LBMConfig.tile_order`` — mean neighbour
-index distance, cross-tile link fraction, and the cross-tile link distance
-histogram in tile-index space.
+kernel-only and dispatch-included, plus the achieved-bandwidth estimate
+against the Eqn-10 minimum traffic — the paper's >70%-of-peak metric) with
+the structural quantities that explain it: tile utilisation eta_t (Eqn
+14), porosity, the split-phase link budget (interior / frontier / bounce
+fractions), the per-step indirection-table sizes (monolithic Q*T*n gather
+vs the split interior+frontier tables, and their ratio), a modelled
+bytes-per-node-update column, and the locality metrics introduced with
+``LBMConfig.tile_order`` — mean neighbour index distance, cross-tile link
+fraction, and the cross-tile link distance histogram in tile-index space.
 
 Cases: lid-driven cavity (dense reference), duct, random sphere packs at
 two porosities (Table 6), and the body-like vessel / aorta geometries
@@ -34,7 +38,7 @@ import jax
 
 from benchmarks.common import timed_mflups
 from repro.core.boundary import BoundarySpec
-from repro.core.tiling import TILE_ORDERS
+from repro.core.tiling import NODE_ORDERS, TILE_ORDERS
 from repro.data import geometry as geo
 from repro.launch.lbm import _X_FLOW, _Z_FLOW, Case, make_case
 
@@ -67,48 +71,83 @@ def suite_cases(quick: bool) -> dict:
     return cases
 
 
-def run_suite(cases: dict, orders, backends, steps: int, warmup: int,
+def suite_variants(backends, node_orders, split_modes) -> list:
+    """(backend, node_order, split) triples: the gather backend sweeps
+    split-vs-monolithic streaming, the fused kernel has no split knob."""
+    out = []
+    for backend in backends:
+        for node_order in node_orders:
+            for split in (split_modes if backend == "gather" else (False,)):
+                out.append((backend, node_order, split))
+    return out
+
+
+def run_suite(cases: dict, orders, variants, steps: int, warmup: int,
               dtype: str, dispatch: bool = True) -> list:
     rows = []
-    total = len(cases) * len(orders) * len(backends)
-    print("geometry,tile_order,backend,MFLUPS,MFLUPS_dispatch,eta_t,"
-          "porosity,mean_nbr_index_dist,cross_tile_frac,mean_link_dist")
+    total = len(cases) * len(orders) * len(variants)
+    print("geometry,tile_order,backend,node_order,stream,MFLUPS,BW_GBps,"
+          "eta_t,interior_frac,frontier_frac,index_ratio")
     for gname, case in cases.items():
         for order in orders:
-            for backend in backends:
+            for backend, node_order, split in variants:
                 t0 = time.time()
                 res = timed_mflups(
                     case.geometry, steps=steps, warmup=warmup, dtype=dtype,
                     boundaries=case.boundaries, periodic=case.periodic,
                     backend=backend, tile_order=order, lattice=case.lattice,
-                    force=case.force, dispatch=dispatch)
+                    force=case.force, dispatch=dispatch,
+                    node_order=node_order, split_stream=split)
                 eng = res.eng
                 loc = eng.tiling.locality_metrics()
                 loc.pop("tile_order")
+                tabs = eng.tables
+                # per-step indirection-table sizes: the acceptance metric of
+                # the split-phase restructuring ((Q*n + frontier tables) vs
+                # the monolithic Q*T*n gather table)
+                mono_entries = tabs.index_entries_mono
+                split_entries = (tabs.split.index_entries
+                                 if tabs.split is not None else None)
                 row = {
                     "geometry": gname,
                     "tile_order": order,
+                    "node_order": node_order,
                     "backend": backend,
+                    "stream": "split" if split else "mono",
                     "mflups": round(res.mflups, 4),
                     "mflups_dispatch": (None if res.mflups_dispatch is None
                                         else round(res.mflups_dispatch, 4)),
                     "seconds_per_step": res.seconds_per_step,
+                    # 6 decimals: interpret-mode CI rows can sit well below
+                    # 1e-4 GB/s — must never round to 0 (guards assert > 0)
+                    "bandwidth_gbs": round(res.bandwidth_gbs, 6),
+                    "model_bytes_per_node":
+                        round(res.model_bytes_per_node, 2),
                     "n_fluid_nodes": eng.n_fluid_nodes,
                     "num_tiles": eng.tiling.num_tiles,
                     "tile_utilisation": round(eng.tiling.tile_utilisation, 4),
                     "porosity": round(eng.tiling.porosity, 4),
                     **loc,
-                    "cross_tile_frac": round(eng.tables.cross_tile_frac, 4),
+                    "interior_frac": round(tabs.interior_frac, 4),
+                    "frontier_frac": round(tabs.frontier_frac, 4),
+                    "bounce_frac": round(tabs.bounce_frac, 4),
+                    "cross_tile_frac": round(tabs.cross_tile_frac, 4),
                     "mean_link_distance":
-                        round(eng.tables.mean_link_distance, 2),
-                    "link_distance_hist": eng.tables.link_distance_hist,
+                        round(tabs.mean_link_distance, 2),
+                    "link_distance_hist": tabs.link_distance_hist,
+                    "index_entries_mono": mono_entries,
+                    "index_entries_split": split_entries,
+                    "index_bytes_per_step": eng.index_bytes_per_step(),
+                    "index_ratio": (None if split_entries is None
+                                    else round(mono_entries / split_entries,
+                                               2)),
                 }
                 rows.append(row)
-                print(f"{gname},{order},{backend},{row['mflups']},"
-                      f"{row['mflups_dispatch']},{row['tile_utilisation']},"
-                      f"{row['porosity']},"
-                      f"{row['mean_neighbor_index_distance']},"
-                      f"{row['cross_tile_frac']},{row['mean_link_distance']}"
+                print(f"{gname},{order},{backend},{node_order},"
+                      f"{row['stream']},{row['mflups']},"
+                      f"{row['bandwidth_gbs']},{row['tile_utilisation']},"
+                      f"{row['interior_frac']},{row['frontier_frac']},"
+                      f"{row['index_ratio']}"
                       f"  [{len(rows)}/{total} {time.time() - t0:.1f}s]")
     return rows
 
@@ -123,7 +162,13 @@ def main(argv=None):
     ap.add_argument("--orders", default=None,
                     help="comma-separated subset of TILE_ORDERS "
                          "(default: zmajor,morton_slab quick; all otherwise)")
+    ap.add_argument("--node-orders", default=None, dest="node_orders",
+                    help="comma-separated subset of NODE_ORDERS "
+                         "(default: canonical,frontier_last)")
     ap.add_argument("--backends", default=",".join(BACKENDS))
+    ap.add_argument("--streams", default="mono,split",
+                    help="gather-backend streaming modes to sweep "
+                         "(subset of mono,split)")
     ap.add_argument("--out", default="BENCH_geometry_suite.json")
     args = ap.parse_args(argv)
 
@@ -132,13 +177,21 @@ def main(argv=None):
               else ["zmajor", "morton_slab"] if args.quick
               else list(TILE_ORDERS))
     assert all(o in TILE_ORDERS for o in orders), orders
+    node_orders = (args.node_orders.split(",") if args.node_orders
+                   else ["canonical", "frontier_last"])
+    assert all(o in NODE_ORDERS for o in node_orders), node_orders
     backends = args.backends.split(",")
+    streams = args.streams.split(",")
+    assert streams and set(streams) <= {"mono", "split"}, streams
+    split_modes = tuple(s == "split" for s in ("mono", "split")
+                        if s in streams)
     steps = args.steps or (2 if args.quick else 20)
 
     cases = suite_cases(args.quick)
+    variants = suite_variants(backends, node_orders, split_modes)
     # quick mode skips the dispatch-included timing: it would compile a
     # second program per row, which dominates interpret-mode CI runs
-    rows = run_suite(cases, orders, backends, steps, args.warmup, args.dtype,
+    rows = run_suite(cases, orders, variants, steps, args.warmup, args.dtype,
                      dispatch=not args.quick)
 
     # structural guards so CI catches config drift, not just crashes
@@ -148,6 +201,12 @@ def main(argv=None):
     assert {r["backend"] for r in rows} >= {"gather", "fused"} or \
         set(backends) != set(BACKENDS)
     assert all(r["mflups"] > 0 for r in rows)
+    assert all(r["bandwidth_gbs"] > 0 for r in rows)
+    for r in rows:          # the split budget must account for every link
+        assert abs(r["interior_frac"] + r["frontier_frac"]
+                   + r["bounce_frac"] - 1.0) < 5e-4, r
+    split_rows = [r for r in rows if r["stream"] == "split"]
+    assert all(r["index_ratio"] > 1 for r in split_rows)
 
     out = {
         "meta": {
@@ -157,7 +216,10 @@ def main(argv=None):
             "steps": steps,
             "dtype": args.dtype,
             "orders": orders,
+            "node_orders": node_orders,
             "backends": backends,
+            "streams": sorted({"split" if s else "mono"
+                               for s in split_modes}),
         },
         "rows": rows,
     }

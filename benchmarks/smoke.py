@@ -1,11 +1,16 @@
 """CI benchmark smoke — keeps the benchmark scripts from rotting.
 
-Two cheap probes (CI-budget sized, not paper-sized):
+Three cheap probes (CI-budget sized, not paper-sized):
   1. the channel-utilisation analysis (pure numpy, exactly reproducible —
-     asserts all its §3.3 claims), and
+     asserts all its §3.3 claims),
   2. one fused-backend timing on a tiny cavity: exercises the full
      timed_mflups path (run()-based kernel-only + dispatch-included
-     numbers) through the Pallas stream+collide kernel in interpret mode.
+     numbers) through the Pallas stream+collide kernel in interpret mode,
+  3. one SPLIT-PHASE streaming configuration on the channel geometry —
+     the regression guard on the frontier compaction: most links must be
+     interior (frontier_frac < 0.5), the split tables must be smaller
+     than the monolithic gather table, and the run must report a positive
+     achieved-bandwidth estimate.
 """
 from __future__ import annotations
 
@@ -21,6 +26,26 @@ def main():
     assert res.eng.cfg.backend == "fused"
     print(f"fused_smoke,cavity16,mflups={res.mflups:.4f},"
           f"mflups_dispatch={res.mflups_dispatch:.4f}")
+
+    # split-phase streaming on the channel geometry (D2Q9, periodic x/z,
+    # body force): the compaction regression guard
+    from repro.launch.lbm import make_case
+
+    case = make_case("channel2d")
+    res = timed_mflups(
+        case.geometry, steps=3, warmup=1, backend="gather",
+        lattice=case.lattice, periodic=case.periodic, force=case.force,
+        split_stream=True, node_order="frontier_last")
+    tabs = res.eng.tables
+    assert res.mflups > 0 and res.bandwidth_gbs > 0
+    assert tabs.frontier_frac < 0.5, tabs.frontier_frac
+    assert tabs.split.index_entries < tabs.index_entries_mono
+    print(f"split_smoke,channel2d,mflups={res.mflups:.4f},"
+          f"bw_gbs={res.bandwidth_gbs:.3f},"
+          f"interior={tabs.interior_frac:.3f},"
+          f"frontier={tabs.frontier_frac:.3f},"
+          f"index_ratio="
+          f"{tabs.index_entries_mono / tabs.split.index_entries:.1f}")
     print("# benchmark smoke OK")
 
 

@@ -56,9 +56,11 @@ def boundary_pass_tables(node_types: np.ndarray, gather_idx: np.ndarray,
     ``node_types``: (T, n) uint8; ``gather_idx``: (Q, T, n) streaming
     indices in the canonical per-direction flat space.  Returns numpy
     ``(tiles (B,), packed_gather (Q, B, n), type_masks (S, B, n),
-    solid (B, n))`` restricted to the tiles that hold boundary nodes.
-    Shared by ``FusedBackend`` and ``ShardedLBM`` so the two fused paths
-    cannot drift.
+    solid (B, n))`` restricted to the tiles that hold boundary nodes —
+    or ``None`` when no node matches any declared boundary type (a
+    declared-but-absent boundary must skip the pass, not scatter over an
+    empty (Q, 0, n) table).  Shared by ``FusedBackend`` and ``ShardedLBM``
+    so the two fused paths cannot drift.
     """
     from repro.kernels.stream_collide import packed_gather_indices
 
@@ -67,9 +69,54 @@ def boundary_pass_tables(node_types: np.ndarray, gather_idx: np.ndarray,
     for tv, _ in boundaries:
         node_bc |= node_types == tv
     bt = np.nonzero(node_bc.any(axis=1))[0].astype(np.int32)
+    if not len(bt):
+        return None
     packed = packed_gather_indices(gather_idx[:, bt, :], q, t, n)
     type_masks = np.stack([node_types[bt] == tv for tv, _ in boundaries])
     return bt, packed, type_masks, node_types[bt] == SOLID
+
+
+def apply_split_stream(f_store, solid, *, intra, is_cross, nbr, case,
+                       bounce_dst, irregular_dst, irregular_src, opp, perms):
+    """Split-phase pull streaming: storage-layout ``f_store`` (Q, T, n) ->
+    post-streaming ``f_in`` (Q, T, n) in node-axis (slot) order.
+
+    Phase 1 (interior): ONE (Q, n) index table broadcast over the tile
+    axis — no per-node index load for intra-tile links.  Phase 2
+    (frontier): cross-tile sources are COMPUTED from the (T, 27) neighbour
+    table + the same (Q, n) tables (zero per-link storage for regular
+    cross links); bounce links scatter over the result from a compact flat
+    destination list (their source is recomputed from ``opp``/``perms``),
+    and the rare statically-unpredictable links use explicit (dst, src)
+    pairs.  Solid destinations are zeroed — their post-collision value is
+    masked to zero anyway, which keeps 'full'-mode steps bitwise identical
+    to the monolithic gather.
+
+    Shared by :class:`GatherBackend` and ``repro.dist.lbm.ShardedLBM`` so
+    the two split paths cannot drift.
+    """
+    q, t, n = f_store.shape
+    m = t * n
+    flat = f_store.reshape(-1)
+    # ---- interior: (Q, n) static permutation broadcast over tiles
+    f_in = jnp.take_along_axis(f_store, intra[:, None, :], axis=-1)
+    # ---- frontier, regular cross links: computed indices, no per-link table
+    src_tile = jnp.moveaxis(jnp.take(nbr, case, axis=1), 0, 1)   # (Q, T, n)
+    idx = (jnp.arange(q, dtype=src_tile.dtype)[:, None, None] * m
+           + src_tile * n + intra[:, None, :])
+    f_cross = jnp.take(flat, idx.reshape(-1)).reshape(q, t, n)
+    f_in = jnp.where(is_cross[:, None, :], f_cross, f_in).reshape(-1)
+    # ---- frontier, bounce links: dst list only; src recomputed on the fly
+    if bounce_dst.size:
+        dq, rem = jnp.divmod(bounce_dst, m)
+        dt_, ds = jnp.divmod(rem, n)
+        src = opp[dq] * m + dt_ * n + perms.reshape(-1)[opp[dq] * n + ds]
+        f_in = f_in.at[bounce_dst].set(jnp.take(flat, src))
+    # ---- frontier, irregular links: explicit (dst, src) pairs
+    if irregular_dst.size:
+        f_in = f_in.at[irregular_dst].set(jnp.take(flat, irregular_src))
+    f_in = f_in.reshape(q, t, n)
+    return jnp.where(solid[None], 0.0, f_in)
 
 
 def nebb_boundary_pass(f_pre, out, lat, collision_cfg, force, specs,
@@ -94,7 +141,14 @@ def nebb_boundary_pass(f_pre, out, lat, collision_cfg, force, specs,
 
 
 class GatherBackend:
-    """One-gather-per-direction streaming + jnp (or Pallas) collision."""
+    """One-gather-per-direction streaming + jnp (or Pallas) collision.
+
+    With ``cfg.split_stream`` the monolithic (Q, T, n) gather is replaced
+    by the split-phase path (:func:`apply_split_stream`): static interior
+    permutation + compact frontier tables.  Output is bitwise identical in
+    'full' mode; in 'propagation_only' mode solid slots read zero instead
+    of the monolithic path's (physically meaningless) bounce value.
+    """
 
     name = "gather"
 
@@ -107,7 +161,22 @@ class GatherBackend:
         self._bc_masks = [
             (jnp.asarray(types == tv), spec) for tv, spec in cfg.boundaries
         ]
-        self._gather = jnp.asarray(tables.gather_idx.reshape(lat.q, -1))
+        self._split = None
+        if cfg.split_stream:
+            sp = tables.split
+            self._split = {
+                "intra": jnp.asarray(sp.intra_idx),
+                "case": jnp.asarray(sp.case.astype(np.int32)),
+                "is_cross": jnp.asarray(sp.is_cross),
+                "nbr": jnp.asarray(sp.nbr),
+                "bounce_dst": jnp.asarray(sp.bounce_dst),
+                "irregular_dst": jnp.asarray(sp.irregular_dst),
+                "irregular_src": jnp.asarray(sp.irregular_src),
+                "opp": jnp.asarray(sp.opp),
+                "perms": jnp.asarray(tables.perms),
+            }
+        else:
+            self._gather = jnp.asarray(tables.gather_idx.reshape(lat.q, -1))
 
     # ------------------------------------------------- layout shuffles
     def to_storage(self, f_canon: jnp.ndarray) -> jnp.ndarray:
@@ -152,9 +221,13 @@ class GatherBackend:
         if self.cfg.kernel_mode == "rw_only":
             # paper §4.1: read + write the node's own data, no propagation
             return f_store + 0.0
-        # streaming + bounce-back: one gather per direction (canonical out)
-        f_in = jnp.take(f_store.reshape(-1), self._gather,
-                        axis=0).reshape(q, t, n)
+        if self._split is not None:
+            # split-phase: static interior perm + compact frontier tables
+            f_in = apply_split_stream(f_store, self._solid, **self._split)
+        else:
+            # streaming + bounce-back: one gather per direction
+            f_in = jnp.take(f_store.reshape(-1), self._gather,
+                            axis=0).reshape(q, t, n)
         if self.cfg.kernel_mode == "propagation_only":
             return self.to_storage(f_in)
         # open boundaries (Zou-He NEBB / constant pressure)
@@ -200,9 +273,11 @@ class FusedBackend:
         self._solid = jnp.asarray(tiling.node_types == SOLID)
 
         self._bc = None
-        if cfg.boundaries and cfg.kernel_mode == "full":
-            bt, packed, type_masks, solid_b = boundary_pass_tables(
-                tiling.node_types, tables.gather_idx, cfg.boundaries, q, n)
+        bc_tabs = (boundary_pass_tables(
+            tiling.node_types, tables.gather_idx, cfg.boundaries, q, n)
+            if cfg.boundaries and cfg.kernel_mode == "full" else None)
+        if bc_tabs is not None:
+            bt, packed, type_masks, solid_b = bc_tabs
             self._bc = {
                 "tiles": jnp.asarray(bt),
                 "gather": jnp.asarray(packed),
@@ -230,7 +305,7 @@ class FusedBackend:
         out = stream_collide_tiles(
             f, self._types, self._nbrs, self.lat, cfg.collision,
             a=cfg.a, force=cfg.force, interpret=self.interpret,
-            mode=cfg.kernel_mode)
+            mode=cfg.kernel_mode, node_order=cfg.node_order)
         if self._bc is not None:
             tab = self._bc
             out = nebb_boundary_pass(

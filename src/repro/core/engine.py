@@ -13,7 +13,11 @@ The step itself is pluggable (``LBMConfig.backend``, see
   per-direction storage layout; the collision math alone can be swapped for
   the Pallas collision kernel with ``use_kernel=True`` (NOT the paper's
   fused kernel — the state still round-trips through pack/unpack inside
-  ``repro.kernels.ops.collide_tiles`` each step).
+  ``repro.kernels.ops.collide_tiles`` each step).  ``split_stream=True``
+  replaces the monolithic (Q, T, n) index table with split-phase
+  streaming: a static (Q, n) interior permutation broadcast over tiles
+  plus compact frontier tables (~10x less indirection-table traffic,
+  bitwise-identical streaming — see ``repro.core.streaming``).
 * ``backend="fused"`` — the paper's fused Pallas stream+collide kernel
   (``repro.kernels.stream_collide``) over state held persistently in the
   kernel's packed (T+1, Q, n) layout: packed once at init, unpacked only in
@@ -56,6 +60,16 @@ class LBMConfig:
     # spatial locality of the tile storage order.  ShardedLBM additionally
     # requires a slab-compatible ordering (zmajor / morton_slab).
     tile_order: str = "zmajor"
+    # within-tile node enumeration: 'canonical' | 'sfc' | 'frontier_last'
+    # (repro.core.tiling.NODE_ORDERS).  Physics-neutral like tile_order;
+    # 'frontier_last' sorts tile-face nodes into a contiguous suffix per
+    # tile so the split-phase frontier scatter touches dense ranges.
+    node_order: str = "canonical"
+    # split-phase streaming (gather backend only): replace the monolithic
+    # (Q, T, n) gather table with a static (Q, n) interior permutation +
+    # compact frontier tables (see repro.core.streaming.SplitStreamTables).
+    # Bitwise identical physics; ~10x less index-table traffic.
+    split_stream: bool = False
     layout_scheme: str = "xyz"                # 'xyz' | 'paper' | ...
     dtype: str = "float32"
     periodic: tuple[bool, bool, bool] = (False, False, False)
@@ -94,12 +108,20 @@ class SparseTiledLBM:
 
     def __init__(self, node_type: np.ndarray, cfg: LBMConfig):
         assert cfg.backend in BACKENDS, cfg.backend
+        if cfg.split_stream and cfg.backend != "gather":
+            raise ValueError(
+                "split_stream restructures the gather backend's streaming; "
+                f"backend must be 'gather' (got {cfg.backend!r} — the fused "
+                "kernel already computes its pull indices from static "
+                "tables)")
         self.cfg = cfg
         self.lat = get_lattice(cfg.lattice)
         self.tiling: Tiling = tile_geometry(node_type, cfg.a,
-                                            order=cfg.tile_order)
+                                            order=cfg.tile_order,
+                                            node_order=cfg.node_order)
         self.tables = build_stream_tables(
-            self.tiling, self.lat, cfg.layout_scheme, cfg.periodic
+            self.tiling, self.lat, cfg.layout_scheme, cfg.periodic,
+            split=cfg.split_stream,
         )
         self.dtype = jnp.dtype(cfg.dtype)
         self.kernel_interpret = _resolve_interpret(cfg)
@@ -178,6 +200,21 @@ class SparseTiledLBM:
         n_d = self.dtype.itemsize
         stored = self.tiling.num_tiles * self.tiling.nodes_per_tile
         return 2 * self.lat.q * n_d * stored
+
+    def index_bytes_per_step(self) -> int:
+        """Indirection-table bytes the step loads besides f itself.
+
+        gather backend: the (Q, T, n) int32 table — or the compact split
+        tables under ``split_stream``.  fused backend: the (T, 27)
+        neighbour table plus the static (Q, n) pull perms/cases.
+        """
+        q, n = self.lat.q, self.tiling.nodes_per_tile
+        t = self.tiling.num_tiles
+        if self.cfg.backend == "fused":
+            return 27 * t * 4 + q * n * 4 + q * n * 1
+        if self.cfg.split_stream:
+            return self.tables.split.index_bytes
+        return self.tables.index_bytes_mono
 
     def mflups(self, seconds_per_step: float) -> float:
         return self.n_fluid_nodes / seconds_per_step / 1e6

@@ -5,14 +5,32 @@ precompute — once, on the host, like the paper's CPU-side tiler — the flat
 index of the source value, folding in:
 
 * the per-direction data-block layout (L_XYZ / L_YXZ / L_zigzagNE),
+* the within-tile node enumeration (``Tiling.node_order``),
 * cross-tile links through the tile map,
 * half-way bounce-back at solid nodes (pull the opposite direction from
   the node itself),
 * optional periodic axes (used by validation tests).
 
-At run time streaming is then ONE gather per direction from the flattened
-(Q * T * a^3) state — every f_i value is read exactly once and written
-exactly once per LBM iteration, the paper's Eqn (10) minimum.
+Two runtime representations are built:
+
+* **monolithic** (``gather_idx``): one (Q, T, n) int32 table, streaming is
+  ONE gather per direction from the flattened (Q * T * a^3) state — every
+  f_i value is read exactly once and written exactly once per LBM
+  iteration, the paper's Eqn (10) minimum, but the INDEX traffic itself is
+  4 bytes per link.
+* **split-phase** (``split=True`` -> :class:`SplitStreamTables`): the
+  statically-known structure of propagation is factored out of the table.
+  Interior links (source tile == destination tile, no bounce) are a single
+  (Q, n) permutation broadcast over tiles; regular cross-tile links need no
+  per-link storage at all — their source is ``nbr[t, case[q, s]] * n +
+  intra_idx[q, s]`` computed from the same (Q, n) tables plus the (T, 27)
+  neighbour table; only bounce links carry a per-link entry (a flat
+  destination list — the source is recomputed from ``opp`` and the layout
+  perms), plus an explicit (dst, src) pair list for the rare links the
+  static prediction cannot express (periodic wrap on a non-tile-aligned
+  extent).  The builder derives every list by COMPARING the static
+  prediction against the monolithic ``gather_idx``, so the two paths are
+  cross-checked by construction and bitwise-identical at fluid nodes.
 """
 from __future__ import annotations
 
@@ -21,8 +39,45 @@ import dataclasses
 import numpy as np
 
 from .lattice import Lattice
-from .layouts import direction_layouts, inverse_permutation, layout_permutation
-from .tiling import SOLID, Tiling, pow2_hist
+from .layouts import XYZ, direction_layouts, layout_permutation
+from .tiling import (NEIGHBOR_OFFSETS, SOLID, Tiling, neighbor_offset_index,
+                     pow2_hist)
+
+SELF_OFFSET = neighbor_offset_index(0, 0, 0)          # 13
+
+
+@dataclasses.dataclass
+class SplitStreamTables:
+    """Compact split-phase streaming tables (numpy; shipped to device).
+
+    Destination indices live in the flat canonical (Q*T*n) space
+    ``q*m + t*n + s``; source indices in the per-direction storage space
+    (same space the monolithic ``gather_idx`` values use).
+    """
+
+    intra_idx: np.ndarray      # (Q, n) int32 wrapped source storage offset
+    case: np.ndarray           # (Q, n) int8  27-neighbour offset idx (13=self)
+    is_cross: np.ndarray       # (Q, n) bool  case != 13
+    nbr: np.ndarray            # (T, 27) int32 neighbour tile (absent -> self)
+    bounce_dst: np.ndarray     # (Lb,) int32 flat canonical destinations
+    irregular_dst: np.ndarray  # (Li,) int32 flat canonical destinations
+    irregular_src: np.ndarray  # (Li,) int32 flat storage sources
+    opp: np.ndarray            # (Q,) int32 opposite-direction map
+
+    # ---- per-step indirection-table accounting -----------------------
+    @property
+    def index_entries(self) -> int:
+        """Stored index-table entries: (Q*n intra + Q*n case + 27*T nbr
+        + bounce dst + irregular pairs).  Compare with Q*T*n monolithic."""
+        return (self.intra_idx.size + self.case.size + self.nbr.size
+                + self.bounce_dst.size + self.irregular_dst.size
+                + self.irregular_src.size + self.opp.size)
+
+    @property
+    def index_bytes(self) -> int:
+        return (self.intra_idx.nbytes + self.case.nbytes + self.nbr.nbytes
+                + self.bounce_dst.nbytes + self.irregular_dst.nbytes
+                + self.irregular_src.nbytes + self.opp.nbytes)
 
 
 @dataclasses.dataclass
@@ -31,14 +86,53 @@ class StreamTables:
 
     gather_idx: np.ndarray     # (Q, T, n) int32 into flat (Q*T*n) storage
     bounce_frac: float         # fraction of links that bounce (diagnostics)
-    perms: np.ndarray          # (Q, n) int32 canonical -> storage slot
-    inv_perms: np.ndarray      # (Q, n) int32 storage slot -> canonical
+    perms: np.ndarray          # (Q, n) int32 node-axis slot -> storage slot
+    inv_perms: np.ndarray      # (Q, n) int32 storage slot -> node-axis slot
     cross_tile_frac: float     # fraction of links read from another tile
+    # link budget of the split-phase decomposition (fluid destinations,
+    # moving directions): interior + frontier + bounce == 1 exactly
+    interior_frac: float = 0.0   # intra-tile, no bounce
+    frontier_frac: float = 0.0   # cross-tile, no bounce (== cross_tile_frac)
     # locality of the cross-tile links in tile-index space: how far apart
     # in the storage order the two ends of a cross-tile link sit — the
     # quantity the tile traversal policy (Tiling.order) reshapes
     mean_link_distance: float = 0.0
     link_distance_hist: dict = dataclasses.field(default_factory=dict)
+    split: SplitStreamTables | None = None
+
+    @property
+    def index_entries_mono(self) -> int:
+        return int(self.gather_idx.size)
+
+    @property
+    def index_bytes_mono(self) -> int:
+        return int(self.gather_idx.nbytes)
+
+
+def _split_neighbor_table(tiling: Tiling,
+                          periodic: tuple[bool, bool, bool]) -> np.ndarray:
+    """(T, 27) neighbour tile ids for the split-phase cross gather.
+
+    Absent / out-of-grid neighbours point at the tile ITSELF (the value
+    pulled there is garbage, but every such link is a bounce link and gets
+    overwritten by the bounce scatter).  Periodic axes wrap at tile
+    granularity when the original extent is a multiple of ``a``; otherwise
+    the wrap-crossing links land in the irregular list instead.
+    """
+    grid = np.array(tiling.tile_grid, np.int64)
+    shifted = (tiling.tile_coords[:, None, :].astype(np.int64)
+               + NEIGHBOR_OFFSETS[None, :, :])                  # (T, 27, 3)
+    in_grid = np.ones(shifted.shape[:2], bool)
+    for ax in range(3):
+        if periodic[ax] and tiling.orig_shape[ax] % tiling.a == 0:
+            shifted[..., ax] %= grid[ax]
+        else:
+            in_grid &= (shifted[..., ax] >= 0) & (shifted[..., ax] < grid[ax])
+    clamped = np.clip(shifted, 0, grid - 1)
+    nbr = tiling.tile_map[clamped[..., 0], clamped[..., 1], clamped[..., 2]]
+    nbr = np.where(in_grid, nbr, -1).astype(np.int64)
+    own = np.arange(tiling.num_tiles, dtype=np.int64)[:, None]
+    return np.where(nbr < 0, own, nbr).astype(np.int32)
 
 
 def build_stream_tables(
@@ -46,6 +140,7 @@ def build_stream_tables(
     lat: Lattice,
     layout_scheme: str = "xyz",
     periodic: tuple[bool, bool, bool] = (False, False, False),
+    split: bool = False,
 ) -> StreamTables:
     a = tiling.a
     n = a ** 3
@@ -56,21 +151,35 @@ def build_stream_tables(
     # periodic wrap must use the ORIGINAL extent (padding is solid filler)
     wrap_dims = np.array(tiling.orig_shape, dtype=np.int64)
 
+    # effective per-direction permutation canonical offset -> storage slot:
+    # the XYZ layout follows the node_order slot enumeration (that IS the
+    # placement the node-order policy controls); the other layouts keep
+    # their own coordinate-derived placement.
+    node_perm = tiling.node_perm                         # canonical -> slot
+    node_inv = tiling.node_of_slot                       # slot -> canonical
     layouts = direction_layouts(lat, layout_scheme)
-    perms = np.stack([layout_permutation(l, a) for l in layouts])       # (Q, n)
-    inv_perms = np.stack([inverse_permutation(l, a) for l in layouts])  # (Q, n)
+    eff_perms = np.stack(
+        [node_perm if l == XYZ else layout_permutation(l, a).astype(np.int64)
+         for l in layouts])                              # (Q, n) canon->store
+    # node-axis slot -> storage slot (identity for the 'xyz' scheme under
+    # every node_order): what to_storage()/canonical() apply
+    slot_perms = eff_perms[:, node_inv]
+    inv_perms = np.empty_like(slot_perms)
+    for q in range(lat.q):
+        inv_perms[q][slot_perms[q]] = np.arange(n, dtype=np.int64)
 
-    coords = tiling.node_coords().astype(np.int64)      # (T, n, 3) canonical
+    coords = tiling.node_coords().astype(np.int64)      # (T, n, 3) slot order
     types = tiling.node_types                           # (T, n)
     tile_map = tiling.tile_map
 
     # flat storage index of every node's own slot, per direction (for bounce)
     self_tile = np.arange(t_cnt, dtype=np.int64)[:, None]               # (T, 1)
-    canon = np.arange(n, dtype=np.int64)[None, :]                       # (1, n)
 
     gather = np.empty((lat.q, t_cnt, n), dtype=np.int64)
+    bounce_np = np.zeros((lat.q, t_cnt, n), dtype=bool)
     bounce_links = 0
     cross_links = 0
+    interior_links = 0
     dist_sum = 0
     dist_buckets = np.zeros(64, dtype=np.int64)   # log2-spaced
     fluid = types != SOLID
@@ -91,18 +200,21 @@ def build_stream_tables(
         src_off = so[..., 0] + a * so[..., 1] + a * a * so[..., 2]      # canonical
         empty = src_tile < 0
         src_tile_cl = np.maximum(src_tile, 0)
-        solid_src = types[src_tile_cl, src_off] == SOLID
+        solid_src = types[src_tile_cl, node_perm[src_off]] == SOLID
         bounce = oob | empty | solid_src
 
         opp = int(lat.opp[q])
-        idx_pull = q * m + src_tile_cl * n + perms[q][src_off]
-        idx_self = opp * m + self_tile * n + perms[opp][canon]
+        idx_pull = q * m + src_tile_cl * n + eff_perms[q][src_off]
+        idx_self = opp * m + self_tile * n + slot_perms[opp][None, :]
         gather[q] = np.where(bounce, idx_self, idx_pull)
+        bounce_np[q] = bounce
 
         if q > 0:
             bounce_links += int((bounce & fluid).sum())
             cross = (src_tile_cl != self_tile) & ~bounce & fluid
             cross_links += int(cross.sum())
+            interior_links += int(((src_tile_cl == self_tile)
+                                   & ~bounce & fluid).sum())
             if cross.any():
                 d = np.abs(src_tile_cl - self_tile)[cross]
                 dist_sum += int(d.sum())
@@ -111,12 +223,66 @@ def build_stream_tables(
 
     total_links = max(1, int(fluid.sum()) * (lat.q - 1))
     hist = pow2_hist(dist_buckets)
-    return StreamTables(
+    tables = StreamTables(
         gather_idx=gather.astype(np.int32),
         bounce_frac=bounce_links / total_links,
-        perms=perms.astype(np.int32),
+        perms=slot_perms.astype(np.int32),
         inv_perms=inv_perms.astype(np.int32),
         cross_tile_frac=cross_links / total_links,
+        interior_frac=interior_links / total_links,
+        frontier_frac=cross_links / total_links,
         mean_link_distance=dist_sum / cross_links if cross_links else 0.0,
         link_distance_hist=hist,
+    )
+    if split:
+        tables.split = _build_split_tables(
+            tiling, lat, periodic, eff_perms, gather, bounce_np, fluid)
+    return tables
+
+
+def _build_split_tables(tiling: Tiling, lat: Lattice, periodic,
+                        eff_perms: np.ndarray, gather: np.ndarray,
+                        bounce: np.ndarray, fluid: np.ndarray
+                        ) -> SplitStreamTables:
+    """Factor ``gather`` into the compact split-phase representation.
+
+    Works by comparing the static prediction (intra permutation broadcast +
+    neighbour-table cross links) against the monolithic table: positions
+    that disagree at fluid destinations become per-link entries (bounce
+    destinations, or explicit irregular pairs).
+    """
+    a, n, t_cnt, q_cnt = tiling.a, tiling.nodes_per_tile, tiling.num_tiles, lat.q
+    m = t_cnt * n
+    node_inv = tiling.node_of_slot                       # slot -> canonical
+    c = node_inv
+    x, y, z = c % a, (c // a) % a, c // (a * a)          # coords per slot
+
+    intra = np.zeros((q_cnt, n), np.int64)
+    case = np.full((q_cnt, n), SELF_OFFSET, np.int64)
+    for q in range(q_cnt):
+        e = lat.e[q].astype(np.int64)
+        sx, sy, sz = x - e[0], y - e[1], z - e[2]
+        wrapped = (sx % a) + a * (sy % a) + a * a * (sz % a)   # canonical
+        intra[q] = eff_perms[q][wrapped]
+        case[q] = neighbor_offset_index(0, 0, 0) \
+            + (sx // a) + 3 * (sy // a) + 9 * (sz // a)
+
+    nbr = _split_neighbor_table(tiling, periodic)        # (T, 27)
+    src_tile = nbr[:, case]                              # (T, Q, n)
+    static = (np.arange(q_cnt, dtype=np.int64)[None, :, None] * m
+              + src_tile.astype(np.int64) * n + intra[None, :, :])
+    static = np.moveaxis(static, 0, 1)                   # (Q, T, n)
+
+    mismatch = (static != gather) & fluid[None]
+    b_dst = np.nonzero((mismatch & bounce).reshape(-1))[0]
+    irr = np.nonzero((mismatch & ~bounce).reshape(-1))[0]
+    return SplitStreamTables(
+        intra_idx=intra.astype(np.int32),
+        case=case.astype(np.int8),
+        is_cross=case != SELF_OFFSET,
+        nbr=nbr.astype(np.int32),
+        bounce_dst=b_dst.astype(np.int32),
+        irregular_dst=irr.astype(np.int32),
+        irregular_src=gather.reshape(-1)[irr].astype(np.int32),
+        opp=lat.opp.astype(np.int32),
     )

@@ -54,6 +54,21 @@ TILE_ORDERS = ("zmajor", "morton", "hilbert", "morton_slab")
 # orderings that keep runs of z tile-layers contiguous (dist.SlabPlan)
 SLAB_COMPATIBLE_ORDERS = ("zmajor", "morton_slab")
 
+# ==========================================================================
+# within-tile node orders (the follow-up paper's node-reordering knob,
+# arXiv:1703.08015: reorder NODES inside a tile, not just tiles)
+# ==========================================================================
+# "canonical"      — x + a*y + a^2*z (XYZ row order, the historic default).
+# "sfc"            — 3-D Morton order of the (x, y, z) local coordinates.
+# "frontier_last"  — nodes on a tile face (the only nodes any lattice link
+#                    with |e| <= 1 can leave the tile from) are sorted to a
+#                    contiguous SUFFIX of the tile; interior nodes come
+#                    first.  The split-phase frontier gather/scatter then
+#                    touches dense index ranges per tile.
+# Every order is a single (a^3,) permutation shared by ALL tiles — that is
+# what keeps the split-phase interior table at (Q, n) instead of (Q, T, n).
+NODE_ORDERS = ("canonical", "sfc", "frontier_last")
+
 
 def _spread_bits(v: np.ndarray, bits: int, stride: int) -> np.ndarray:
     """Insert ``stride - 1`` zero bits between the low ``bits`` bits of v."""
@@ -154,6 +169,44 @@ def tile_order_permutation(coords: np.ndarray, order: str) -> np.ndarray:
     return np.lexsort((morton_key_2d(x, y, bits), z))
 
 
+def static_frontier_mask(a: int) -> np.ndarray:
+    """(a^3,) bool over CANONICAL offsets: True where the node touches a
+    tile face, i.e. where at least one unit-stencil link leaves the tile."""
+    n = np.arange(a ** 3)
+    x, y, z = n % a, (n // a) % a, n // (a * a)
+    edge = a - 1
+    return (x == 0) | (x == edge) | (y == 0) | (y == edge) \
+        | (z == 0) | (z == edge)
+
+
+def node_order_permutation(order: str, a: int) -> np.ndarray:
+    """sigma: canonical offset -> storage slot, for ``order`` (NODE_ORDERS).
+
+    The inverse (slot -> canonical offset) is ``np.argsort(sigma)``.  The
+    permutation is shared by every tile — it depends only on local (x, y, z)
+    — so streaming's interior table stays (Q, n) under any node order.
+    """
+    n = a ** 3
+    if order == "canonical":
+        return np.arange(n, dtype=np.int64)
+    if order not in NODE_ORDERS:
+        raise ValueError(
+            f"unknown node order {order!r}; expected one of {NODE_ORDERS}")
+    idx = np.arange(n)
+    x, y, z = idx % a, (idx // a) % a, idx // (a * a)
+    if order == "sfc":
+        bits = max(1, (a - 1).bit_length())
+        node_of_slot = np.argsort(
+            morton_key_3d(x.astype(np.uint64), y.astype(np.uint64),
+                          z.astype(np.uint64), bits), kind="stable")
+    else:  # frontier_last: (is_face_node, canonical) lexicographic
+        node_of_slot = np.argsort(
+            static_frontier_mask(a).astype(np.int64) * n + idx, kind="stable")
+    sigma = np.empty(n, dtype=np.int64)
+    sigma[node_of_slot] = np.arange(n, dtype=np.int64)
+    return sigma
+
+
 @dataclasses.dataclass
 class Tiling:
     a: int                       # nodes per tile edge
@@ -163,8 +216,20 @@ class Tiling:
     tile_coords: np.ndarray      # (T, 3) int32, tile-grid coords (nonEmptyTiles)
     tile_map: np.ndarray         # (TX, TY, TZ) int32
     tile_neighbors: np.ndarray   # (T, 27) int32
-    node_types: np.ndarray       # (T, a^3) uint8, XYZ order within tile
+    node_types: np.ndarray       # (T, a^3) uint8, node axis in node_order slots
     order: str = "zmajor"        # tile traversal policy (TILE_ORDERS)
+    node_order: str = "canonical"  # within-tile node enumeration (NODE_ORDERS)
+
+    # ---- within-tile node enumeration --------------------------------
+    @property
+    def node_perm(self) -> np.ndarray:
+        """sigma: canonical XYZ offset -> storage slot (a^3,)."""
+        return node_order_permutation(self.node_order, self.a)
+
+    @property
+    def node_of_slot(self) -> np.ndarray:
+        """Inverse of :attr:`node_perm`: storage slot -> canonical offset."""
+        return np.argsort(self.node_perm, kind="stable")
 
     # ---- statistics (paper §3.3) ------------------------------------
     @property
@@ -241,23 +306,28 @@ class Tiling:
         }
 
     def node_coords(self) -> np.ndarray:
-        """Global (x, y, z) for every (tile, node) slot — (T, a^3, 3) int32."""
+        """Global (x, y, z) for every (tile, node) slot — (T, a^3, 3) int32.
+
+        The node axis follows :attr:`node_order` slots (canonical XYZ when
+        ``node_order='canonical'``)."""
         a = self.a
-        n = np.arange(a ** 3, dtype=np.int32)
-        # canonical XYZ order: offset = x + a*y + a^2*z
+        n = self.node_of_slot.astype(np.int32)   # canonical offset per slot
         local = np.stack([n % a, (n // a) % a, n // (a * a)], axis=-1)
         return self.tile_coords[:, None, :] * a + local[None, :, :]
 
 
 def tile_geometry(node_type: np.ndarray, a: int = 4,
-                  order: str = "zmajor") -> Tiling:
+                  order: str = "zmajor",
+                  node_order: str = "canonical") -> Tiling:
     """Cover ``node_type`` (X, Y, Z) with a^3 tiles, dropping all-solid tiles.
 
     The paper's Algorithm 1, vectorised.  Geometry is padded with SOLID up to
     multiples of ``a``.  ``order`` selects the traversal policy assigning
-    tile indices (:data:`TILE_ORDERS`); everything downstream (tile_map,
-    neighbour tables, streaming tables) is derived from the ordered
-    ``tile_coords``, so the choice is physics-neutral by construction.
+    tile indices (:data:`TILE_ORDERS`); ``node_order`` selects the
+    within-tile node enumeration (:data:`NODE_ORDERS`) that every (T, a^3)
+    product uses.  Everything downstream (tile_map, neighbour tables,
+    streaming tables) is derived from the ordered ``tile_coords`` and
+    ``node_coords``, so both choices are physics-neutral by construction.
     """
     assert node_type.ndim == 3, "node_type must be (Nx, Ny, Nz)"
     node_type = np.ascontiguousarray(node_type.astype(np.uint8))
@@ -298,6 +368,12 @@ def tile_geometry(node_type: np.ndarray, a: int = 4,
     neigh = np.where(in_grid, neigh, -1).astype(np.int32)
 
     types = blocks[coords[:, 0], coords[:, 1], coords[:, 2]]  # (T, a^3)
+    if node_order != "canonical":
+        # re-enumerate the node axis: slot s holds canonical node
+        # node_of_slot[s] (= argsort of the canonical->slot permutation)
+        node_of_slot = np.argsort(
+            node_order_permutation(node_order, a), kind="stable")
+        types = types[:, node_of_slot]
 
     return Tiling(
         a=a,
@@ -309,6 +385,7 @@ def tile_geometry(node_type: np.ndarray, a: int = 4,
         tile_neighbors=neigh,
         node_types=types.astype(np.uint8),
         order=order,
+        node_order=node_order,
     )
 
 

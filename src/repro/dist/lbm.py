@@ -103,6 +103,7 @@ class SlabPlan:
     n_fluid_own: int                       # owned non-solid nodes (global)
     periodic_z: bool
     tile_order: str = "zmajor"             # slab-compatible traversal
+    node_order: str = "canonical"          # within-tile node enumeration
     tile_utilisation: float = 0.0          # global eta_t (Eqn 14)
 
     @property
@@ -128,13 +129,16 @@ class SlabPlan:
 
 def make_slab_plan(node_type: np.ndarray, a: int, n_dev: int,
                    periodic_z: bool = False,
-                   tile_order: str = "zmajor") -> SlabPlan:
+                   tile_order: str = "zmajor",
+                   node_order: str = "canonical") -> SlabPlan:
     """Slab-decompose a dense geometry into ``n_dev`` z slabs of tiles.
 
     ``tile_order`` must keep z tile-layers contiguous (SLAB_COMPATIBLE_
     ORDERS): global space-filling orders ('morton', 'hilbert') interleave
     layers, which would break both the contiguous-slab invariant and the
-    halo tile-row alignment between neighbouring devices.
+    halo tile-row alignment between neighbouring devices.  ``node_order``
+    (any of NODE_ORDERS) permutes nodes within tiles only, so it composes
+    with every slab-compatible tile order.
     """
     if tile_order not in SLAB_COMPATIBLE_ORDERS:
         raise ValueError(
@@ -142,7 +146,8 @@ def make_slab_plan(node_type: np.ndarray, a: int, n_dev: int,
             f"decomposition needs one of {SLAB_COMPATIBLE_ORDERS} "
             "(use 'morton_slab' for in-layer locality)")
     node_type = np.ascontiguousarray(node_type.astype(np.uint8))
-    g_tiling = tile_geometry(node_type, a, order=tile_order)
+    g_tiling = tile_geometry(node_type, a, order=tile_order,
+                             node_order=node_order)
     tz = g_tiling.tile_grid[2]
     wrap = periodic_z and n_dev > 1
     if wrap:
@@ -177,7 +182,8 @@ def make_slab_plan(node_type: np.ndarray, a: int, n_dev: int,
                           (0, (g_hi - g_lo) * a - sub.shape[2])),
                     constant_values=SOLID)
             z0 = zl - g_lo
-        local_tilings.append(tile_geometry(sub, a, order=tile_order))
+        local_tilings.append(tile_geometry(sub, a, order=tile_order,
+                                           node_order=node_order))
         own_z0.append(z0)
 
     t_max = max(t.num_tiles for t in local_tilings)
@@ -199,6 +205,7 @@ def make_slab_plan(node_type: np.ndarray, a: int, n_dev: int,
                     local_tilings=local_tilings, own=own,
                     t_max=t_max, t_pad=t_pad, n_fluid_own=n_fluid_own,
                     periodic_z=bool(periodic_z), tile_order=tile_order,
+                    node_order=node_order,
                     tile_utilisation=g_tiling.tile_utilisation)
 
 
@@ -224,6 +231,8 @@ class ShardedLBM:
         self.fused = cfg.backend == "fused"
         if self.fused and cfg.layout_scheme != "xyz":
             raise ValueError("backend='fused' requires layout_scheme='xyz'")
+        if cfg.split_stream and self.fused:
+            raise ValueError("split_stream requires backend='gather'")
         self.kernel_interpret = _resolve_interpret(cfg)
 
         sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
@@ -236,7 +245,8 @@ class ShardedLBM:
 
         self.plan = make_slab_plan(node_type, cfg.a, n_slab,
                                    periodic_z=cfg.periodic[2],
-                                   tile_order=cfg.tile_order)
+                                   tile_order=cfg.tile_order,
+                                   node_order=cfg.node_order)
         self._build_tables()
         self._build_step()
         self.f = None
@@ -264,8 +274,10 @@ class ShardedLBM:
         types = np.zeros((d_cnt, tp, n), np.uint8)
         tabs_of_dev = []
         self._perms = None
+        frac_w, fracs = [], []
         for d, lt in enumerate(plan.local_tilings):
-            tabs = build_stream_tables(lt, lat, cfg.layout_scheme, periodic)
+            tabs = build_stream_tables(lt, lat, cfg.layout_scheme, periodic,
+                                       split=cfg.split_stream)
             tabs_of_dev.append(tabs)
             if self._perms is None:     # layout perms are device-independent
                 self._perms = tabs.perms
@@ -281,6 +293,15 @@ class ShardedLBM:
             gather[d, :, t_loc:] = qi * m_pad + ti * n + oi
             solid[d, :t_loc] = lt.node_types == SOLID
             types[d, :t_loc] = lt.node_types
+            frac_w.append(lt.n_fluid_nodes)
+            fracs.append((tabs.interior_frac, tabs.frontier_frac,
+                          tabs.bounce_frac))
+        # fluid-link-weighted split-phase budget over the local tables
+        # (halo tiles counted once per device; a dry-run diagnostic)
+        w = np.asarray(frac_w, np.float64) / max(1, sum(frac_w))
+        self.stream_fracs = dict(zip(
+            ("interior_frac", "frontier_frac", "bounce_frac"),
+            (float(np.dot(w, [f[i] for f in fracs])) for i in range(3))))
 
         own_nodes = plan.own[:, :, None] & ~solid
         tbl = {"solid": solid, "own_nodes": own_nodes}
@@ -290,8 +311,11 @@ class ShardedLBM:
         if self.fused:
             self._build_fused_tables(tbl, specs, types, tabs_of_dev, periodic)
         else:
-            tbl["gather"] = gather
-            specs["gather"] = P("slab", None, None, None)
+            if cfg.split_stream:
+                self._build_split_tables(tbl, specs, tabs_of_dev)
+            else:
+                tbl["gather"] = gather
+                specs["gather"] = P("slab", None, None, None)
             if cfg.boundaries:
                 tbl["bc"] = np.stack([types == tv for tv, _ in cfg.boundaries])
                 specs["bc"] = P(None, "slab", None, None)
@@ -348,6 +372,52 @@ class ShardedLBM:
         self._f_shape = ((d_cnt, tp, q, n) if self.fused
                          else (d_cnt, q, tp, n))
 
+    def _build_split_tables(self, tbl, specs, tabs_of_dev) -> None:
+        """Per-slab split-phase streaming tables, padded to common widths.
+
+        The static (Q, n) pull tables are device-independent and become
+        closure constants of the step body; only the (T, 27) neighbour
+        table and the per-link frontier lists are per-slab.  Padded list
+        entries target slot 0 of the dummy tile (which is solid and held
+        at zero), so they write zero over zero — harmless on every device.
+        """
+        plan = self.plan
+        tp, n = plan.t_pad, plan.nodes_per_tile
+        d_cnt = plan.n_dev
+        m_pad = tp * n
+        sp0 = tabs_of_dev[0].split
+        self._split_static = {
+            "intra": jnp.asarray(sp0.intra_idx),
+            "case": jnp.asarray(sp0.case.astype(np.int32)),
+            "is_cross": jnp.asarray(sp0.is_cross),
+            "opp": jnp.asarray(sp0.opp),
+            "perms": jnp.asarray(self._perms),
+        }
+        nbr = np.empty((d_cnt, tp, 27), np.int32)
+        b_max = max(t.split.bounce_dst.size for t in tabs_of_dev)
+        i_max = max(t.split.irregular_dst.size for t in tabs_of_dev)
+        dummy_flat = (tp - 1) * n      # q=0, dummy tile, slot 0 (stays zero)
+        bdst = np.full((d_cnt, b_max), dummy_flat, np.int32)
+        idst = np.full((d_cnt, i_max), dummy_flat, np.int32)
+        isrc = np.full((d_cnt, i_max), dummy_flat, np.int32)
+        for d, tabs in enumerate(tabs_of_dev):
+            sp = tabs.split
+            t_loc = sp.nbr.shape[0]
+            m_loc = t_loc * n
+
+            def remap(idx, _m=m_loc):   # local (Q*T*n) -> padded (Q*Tp*n)
+                idx = idx.astype(np.int64)
+                return ((idx // _m) * m_pad + idx % _m).astype(np.int32)
+
+            nbr[d, :t_loc] = sp.nbr
+            nbr[d, t_loc:] = np.arange(t_loc, tp, dtype=np.int32)[:, None]
+            bdst[d, :sp.bounce_dst.size] = remap(sp.bounce_dst)
+            idst[d, :sp.irregular_dst.size] = remap(sp.irregular_dst)
+            isrc[d, :sp.irregular_src.size] = remap(sp.irregular_src)
+        tbl.update(sp_nbr=nbr, sp_bdst=bdst, sp_idst=idst, sp_isrc=isrc)
+        specs.update(sp_nbr=P("slab", None, None), sp_bdst=P("slab", None),
+                     sp_idst=P("slab", None), sp_isrc=P("slab", None))
+
     def _build_fused_tables(self, tbl, specs, types, tabs_of_dev,
                             periodic) -> None:
         """Per-slab tables for the fused kernel: neighbour tables (dummy
@@ -371,12 +441,17 @@ class ShardedLBM:
         if not (cfg.boundaries and cfg.kernel_mode == "full"):
             return
         # per-device boundary-pass tables from the shared builder, padded to
-        # a common width; padded rows target the dummy tile's (zero) slots
+        # a common width; padded rows target the dummy tile's (zero) slots.
+        # A device (or the whole fleet) may have NO boundary nodes — the
+        # builder returns None there and the pass is skipped entirely when
+        # no device needs it.
         per_dev = [boundary_pass_tables(lt.node_types,
                                         tabs_of_dev[d].gather_idx,
                                         cfg.boundaries, q, n)
                    for d, lt in enumerate(plan.local_tilings)]
-        b_max = max(1, max(len(r[0]) for r in per_dev))
+        if all(r is None for r in per_dev):
+            return
+        b_max = max(len(r[0]) for r in per_dev if r is not None)
         qi = np.arange(q)[:, None, None]
         oi = np.arange(n)[None, None, :]
         bct = np.full((d_cnt, b_max), dummy, np.int32)
@@ -384,9 +459,10 @@ class ShardedLBM:
                               (d_cnt, q, b_max, n)).copy().astype(np.int32)
         bcm = np.zeros((len(cfg.boundaries), d_cnt, b_max, n), bool)
         bcs = np.ones((d_cnt, b_max, n), bool)
-        for d, (bt, packed, type_masks, solid_b) in enumerate(per_dev):
-            if not len(bt):
+        for d, r in enumerate(per_dev):
+            if r is None:
                 continue
+            bt, packed, type_masks, solid_b = r
             bct[d, :len(bt)] = bt
             bcg[d, :, :len(bt)] = packed
             bcm[:, d, :len(bt)] = type_masks
@@ -468,8 +544,17 @@ class ShardedLBM:
                     jnp.where(rdm[None, :, None], dn, f[:, rd]))
             if cfg.kernel_mode == "rw_only":
                 return (f + 0.0)[None]
-            f_in = jnp.take(f.reshape(-1), tbl["gather"][0].reshape(-1),
-                            axis=0).reshape(q, tp, n)
+            if cfg.split_stream:
+                from repro.core.backends import apply_split_stream
+
+                f_in = apply_split_stream(
+                    f, tbl["solid"][0], nbr=tbl["sp_nbr"][0],
+                    bounce_dst=tbl["sp_bdst"][0],
+                    irregular_dst=tbl["sp_idst"][0],
+                    irregular_src=tbl["sp_isrc"][0], **self._split_static)
+            else:
+                f_in = jnp.take(f.reshape(-1), tbl["gather"][0].reshape(-1),
+                                axis=0).reshape(q, tp, n)
             if cfg.kernel_mode == "propagation_only":
                 return self._to_storage(f_in)[None]
             for i, (_, spec) in enumerate(cfg.boundaries):
@@ -496,7 +581,7 @@ class ShardedLBM:
             out = stream_collide_tiles(
                 f, tbl["types"][0], tbl["nbrs"][0], lat, cfg.collision,
                 a=cfg.a, force=cfg.force, interpret=self.kernel_interpret,
-                mode=cfg.kernel_mode)
+                mode=cfg.kernel_mode, node_order=cfg.node_order)
             if "bcg" in tbl:
                 # masked NEBB pass (shared with FusedBackend): re-stream +
                 # rebuild + collide ONLY the boundary tiles, pre-step state

@@ -56,14 +56,17 @@ MODES = ("full", "propagation_only", "rw_only")
 _PULL_CACHE: dict[tuple, tuple] = {}
 
 
-def _pull_geometry(lat: Lattice, a: int = 4):
+def _pull_geometry(lat: Lattice, a: int = 4, node_order: str = "canonical"):
     """Static pull tables.
 
     Returns (offsets, perms (Q, n) int32, cases (Q, n) int8) where
     offsets is the ordered list of distinct neighbour tile offsets the
     lattice links to, and cases[q, node] = 0 for an in-tile source or
-    1 + offsets.index(node's source-tile offset)."""
-    key = (lat.name, a)
+    1 + offsets.index(node's source-tile offset).  Under a non-canonical
+    ``node_order`` (repro.core.tiling.NODE_ORDERS) both tables are
+    remapped into the within-tile slot enumeration: row index = dst slot,
+    perm values = src slots."""
+    key = (lat.name, a, node_order)
     if key in _PULL_CACHE:
         return _PULL_CACHE[key]
     n = a ** 3
@@ -84,6 +87,13 @@ def _pull_geometry(lat: Lattice, a: int = 4):
             if off not in offsets:
                 offsets.append(off)
             cases[q, node] = 1 + offsets.index(off)
+    if node_order != "canonical":
+        from repro.core.tiling import node_order_permutation
+
+        sigma = node_order_permutation(node_order, a)   # canonical -> slot
+        inv = np.argsort(sigma, kind="stable")          # slot -> canonical
+        perms = sigma[perms][:, inv].astype(np.int32)
+        cases = cases[:, inv]
     _PULL_CACHE[key] = (offsets, perms, cases)
     return _PULL_CACHE[key]
 
@@ -195,13 +205,17 @@ def zero_scratch_row(f: jnp.ndarray, row: int) -> jnp.ndarray:
 
 def stream_collide_tiles(f, node_types, neighbors, lat: Lattice,
                          cfg: col.CollisionConfig, a: int = 4, force=None,
-                         interpret: bool | None = None, mode: str = "full"):
+                         interpret: bool | None = None, mode: str = "full",
+                         node_order: str = "canonical"):
     """One fused LBM step over all tiles.
 
     f:          (T+1, Q, n) — scratch tile at index T must be zero
     node_types: (T+1, n) uint8 — scratch tile must be SOLID
     neighbors:  (T, 27) int32 — empty/out-of-grid entries = T (scratch)
     mode:       'full' | 'propagation_only' | 'rw_only' (paper §4.1)
+    node_order: within-tile node enumeration the caller's f/node_types use
+                (repro.core.tiling.NODE_ORDERS); the static pull tables are
+                remapped to match
     interpret:  None = auto (interpret unless on tpu — this kernel's scalar
                 prefetch is TPU-specific Pallas and does not lower on gpu)
     Returns the post-step (T+1, Q, n) (scratch row zeroed).
@@ -224,7 +238,7 @@ def stream_collide_tiles(f, node_types, neighbors, lat: Lattice,
         )(f)
         return zero_scratch_row(out, t)
 
-    offsets, perms_np, cases_np = _pull_geometry(lat, a)
+    offsets, perms_np, cases_np = _pull_geometry(lat, a, node_order)
     kernel = make_kernel(lat, cfg, len(offsets), force, mode)
 
     perms = jnp.asarray(perms_np)

@@ -27,7 +27,7 @@ import numpy as np
 from repro.core import collision as C
 from repro.core.boundary import BoundarySpec
 from repro.core.engine import LBMConfig, SparseTiledLBM
-from repro.core.tiling import INLET, OUTLET, TILE_ORDERS
+from repro.core.tiling import INLET, NODE_ORDERS, OUTLET, TILE_ORDERS
 from repro.data import geometry as geo
 from repro.dist.lbm import ShardedLBM
 from repro.launch.mesh import make_production_mesh, mesh_chip_count
@@ -94,7 +94,8 @@ def make_case(name: str, scale: int = 1) -> Case:
 
 
 def dryrun(multi_pod: bool, collision: str = "lbgk",
-           fluid: str = "incompressible", verbose: bool = True) -> dict:
+           fluid: str = "incompressible", verbose: bool = True,
+           node_order: str = "canonical", split_stream: bool = False) -> dict:
     mesh = make_production_mesh(multi_pod=multi_pod)
     chips = mesh_chip_count(mesh)
     axis = ("pod", "data") if multi_pod else ("data",)
@@ -109,7 +110,8 @@ def dryrun(multi_pod: bool, collision: str = "lbgk",
     cfg = LBMConfig(
         collision=C.CollisionConfig(model=collision, fluid=fluid, tau=0.6),
         layout_scheme="paper", dtype="float32", boundaries=case.boundaries,
-        periodic=case.periodic)
+        periodic=case.periodic, node_order=node_order,
+        split_stream=split_stream)
     eng = ShardedLBM(g, cfg, mesh, axis=axis, dryrun=True)
     t0 = time.time()
     lowered = eng.lower_step()
@@ -134,6 +136,13 @@ def dryrun(multi_pod: bool, collision: str = "lbgk",
         "geometry": list(g.shape),
         "fluid_nodes": n_own,
         "tile_utilisation": round(eng.plan.tile_utilisation, 4),
+        # split-phase streaming budget (fluid links): interior links use the
+        # static (Q, n) table, frontier links cross tiles, the rest bounce
+        "interior_frac": round(eng.stream_fracs["interior_frac"], 4),
+        "frontier_frac": round(eng.stream_fracs["frontier_frac"], 4),
+        "bounce_frac": round(eng.stream_fracs["bounce_frac"], 4),
+        "node_order": node_order,
+        "split_stream": split_stream,
         "flops_per_device": hc.flops,
         "bytes_per_device": hc.bytes,
         "coll_bytes_per_device": hc.collective_bytes,
@@ -149,6 +158,10 @@ def dryrun(multi_pod: bool, collision: str = "lbgk",
     if verbose:
         print(f"[LBM x {out['mesh']}] OK slabs={out['slabs']} "
               f"geom={out['geometry']} fluid={n_own:,}")
+        print(f"  eta_t={out['tile_utilisation']} "
+              f"interior={out['interior_frac']} "
+              f"frontier={out['frontier_frac']} "
+              f"bounce={out['bounce_frac']}")
         print(f"  memory_analysis: {mem}")
         print(f"  terms: compute={terms['t_compute']*1e6:.1f}us "
               f"memory={terms['t_memory']*1e6:.1f}us "
@@ -166,7 +179,8 @@ def run_local(args):
                                     tau=args.tau),
         layout_scheme="xyz" if args.backend == "fused" else "paper",
         dtype=args.dtype, boundaries=case.boundaries, periodic=case.periodic,
-        force=case.force, backend=args.backend, tile_order=args.order)
+        force=case.force, backend=args.backend, tile_order=args.order,
+        node_order=args.node_order, split_stream=args.split_stream)
     n_dev = len(jax.devices())
     # a case is slab-decomposable only if every device can own >= 1 z
     # tile-layer (2 with a wrapped periodic-z halo) — channel2d, for one,
@@ -193,7 +207,9 @@ def run_local(args):
     jax.block_until_ready(eng.f)
     dt = time.time() - t0
     mflups = n_fluid * args.steps / dt / 1e6
+    stream = "split" if args.split_stream else "mono"
     print(f"case={args.case} backend={args.backend} order={args.order} "
+          f"node_order={args.node_order} stream={stream} "
           f"devices={n_dev if sharded else 1} fluid={n_fluid:,} "
           f"eta_t={util:.3f} "
           f"steps={args.steps} {dt:.2f}s -> {mflups:.2f} MFLUPS")
@@ -209,6 +225,14 @@ def main(argv=None):
     ap.add_argument("--scale", type=int, default=1)
     ap.add_argument("--order", default="zmajor", choices=list(TILE_ORDERS),
                     help="tile traversal policy (data placement)")
+    ap.add_argument("--node-order", default="canonical",
+                    choices=list(NODE_ORDERS), dest="node_order",
+                    help="within-tile node enumeration (data placement)")
+    ap.add_argument("--split-stream", action="store_true",
+                    dest="split_stream",
+                    help="split-phase streaming: static interior "
+                         "permutation + compact frontier tables "
+                         "(gather backend only)")
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--tau", type=float, default=0.6)
     ap.add_argument("--collision", default="lbgk", choices=["lbgk", "lbmrt"])
@@ -224,7 +248,9 @@ def main(argv=None):
         return run_local(args)
     meshes = {"single": [False], "multi": [True],
               "both": [False, True]}[args.mesh]
-    results = [dryrun(mp, args.collision, args.fluid) for mp in meshes]
+    results = [dryrun(mp, args.collision, args.fluid,
+                      node_order=args.node_order,
+                      split_stream=args.split_stream) for mp in meshes]
     if args.out:
         os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
         with open(args.out, "w") as f:

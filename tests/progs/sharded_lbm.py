@@ -41,4 +41,23 @@ fluid[:g.shape[0], :g.shape[1], :g.shape[2]] = g != SOLID
 err = np.nanmax(np.abs(np.where(fluid, dense_s - rho_r, 0.0)))
 assert err < 1e-12, err
 assert abs(ref.total_mass() - sh.total_mass()) / ref.total_mass() < 1e-10
+
+# split-phase streaming + frontier_last node order: same oracle (the
+# gather step is policy-neutral), same 1e-12 parity on owned tiles
+import dataclasses
+cfg2 = dataclasses.replace(cfg, split_stream=True, node_order="frontier_last")
+sh2 = ShardedLBM(g, cfg2, mesh); sh2.step(15)
+rho_s2, _, _, own2 = sh2.macroscopics_own()
+dense_s2 = np.full(ref.tiling.shape, np.nan)
+for d, lt in enumerate(sh2.plan.local_tilings):
+    z_base = sh2.plan.layer_of_dev[d][0] - sh2.plan.own_z0[d]
+    o = own2[d, :lt.num_tiles]
+    coords = lt.node_coords()[o] + np.array([0, 0, z_base * a])
+    dense_s2[coords[..., 0], coords[..., 1], coords[..., 2]] = \
+        rho_s2[d, :lt.num_tiles][o]
+err2 = np.nanmax(np.abs(np.where(fluid, dense_s2 - rho_r, 0.0)))
+assert err2 < 1e-12, err2
+fr = sh2.stream_fracs
+assert abs(fr["interior_frac"] + fr["frontier_frac"]
+           + fr["bounce_frac"] - 1.0) < 1e-9, fr
 print("SHARDED_OK")
