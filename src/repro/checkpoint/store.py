@@ -138,6 +138,36 @@ class CheckpointStore:
                 steps.append(int(name.split("_")[1]))
         return max(steps) if steps else None
 
+    def restore_trees(self, step: int):
+        """Restore EVERY tree of a checkpoint without the caller knowing
+        its structure: tree shapes/dtypes come from the manifest itself.
+
+        Only exact for trees whose structure is expressible as the
+        manifest's flat string keys (nested dicts of arrays — e.g. the
+        session trees ``repro.sim.service`` saves); use :meth:`restore`
+        with explicit ``tree_likes`` to re-materialise custom pytrees.
+        Returns ``(trees, extra)`` like :meth:`restore` (which also
+        performs the torn-checkpoint check).
+        """
+        d = os.path.join(self.root, f"step_{step:09d}")
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+
+        def nest(entry):
+            # zero-allocation templates: restore() only reads .shape
+            tree = {}
+            for key, meta in entry.items():
+                node, parts = tree, key.split("/")
+                for p in parts[:-1]:
+                    node = node.setdefault(p, {})
+                node[parts[-1]] = jax.ShapeDtypeStruct(
+                    tuple(meta["shape"]), np.dtype(meta["dtype"]))
+            return tree
+
+        tree_likes = {tname: nest(entry)
+                      for tname, entry in manifest["trees"].items()}
+        return self.restore(step, tree_likes)
+
     def restore(self, step: int, tree_likes: dict, shardings: dict | None = None):
         """Restore trees shaped like `tree_likes` ({name: pytree of arrays or
         ShapeDtypeStructs}).  `shardings` optionally maps tree name -> a

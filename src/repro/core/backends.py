@@ -19,6 +19,22 @@ with ``fori_loop`` in ``run``):
 Both backends produce identical physics: float64 parity is pinned to 1e-12
 in tests/test_backend_fused.py on all benchmark geometry families.
 
+Ensemble stepping (``repro.sim.ensemble``): both backends can advance B
+INDEPENDENT flow states over the SAME geometry in one dispatch, so the
+indirection tables (the paper's dominant bandwidth cost on sparse
+geometries) are loaded once per step for B states instead of once per
+state:
+
+* gather — a leading batch axis on f: ``ensemble_step`` is ``jax.vmap``
+  of the scalar step, which keeps every replica BITWISE identical to an
+  independent engine (the index tables are closed-over constants shared
+  across the batch).
+* fused — a B-replicated packed state ``(B*T + 1, Q, n)``: the tile axis
+  is replicated B times with per-replica offsets folded into the
+  neighbour table (scratch row shared at index B*T), so ONE pallas_call
+  over a B*T grid advances all replicas while the static (Q, n) pull
+  perms/cases stay a single copy.
+
 Tile traversal order (``LBMConfig.tile_order``): every per-tile table a
 backend builds — packed state, the fused kernel's neighbour table, the
 boundary-pass tables — is derived from ``tiling.tile_coords`` /
@@ -29,6 +45,7 @@ physics.  tests/test_tile_order.py pins bitwise (gather) and 1e-12
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -237,6 +254,32 @@ class GatherBackend:
         f_out = jnp.where(self._solid[None], 0.0, f_out)
         return self.to_storage(f_out)
 
+    # ------------------------------------------------- ensemble (B states)
+    def ensemble_state(self, f_single: jnp.ndarray, batch: int) -> jnp.ndarray:
+        """Replicate one storage state (Q, T, n) into (B, Q, T, n)."""
+        return jnp.repeat(f_single[None], batch, axis=0)
+
+    def ensemble_step(self, fb: jnp.ndarray) -> jnp.ndarray:
+        """One step for B independent states: vmap of the scalar step.
+
+        All index tables (monolithic gather or split frontier tables) are
+        closed-over constants, loaded once for the whole batch.  Each
+        replica is bitwise identical to an unbatched step (pinned in
+        tests/test_sim_ensemble.py).
+        """
+        return jax.vmap(self.step)(fb)
+
+    def ensemble_canonical(self, fb: jnp.ndarray) -> jnp.ndarray:
+        return jax.vmap(self.canonical)(fb)
+
+    def ensemble_get(self, fb: jnp.ndarray, b: int) -> jnp.ndarray:
+        """Extract replica ``b`` as a single-engine storage state."""
+        return fb[b]
+
+    def ensemble_set(self, fb: jnp.ndarray, b: int,
+                     f_single: jnp.ndarray) -> jnp.ndarray:
+        return fb.at[b].set(f_single.astype(fb.dtype))
+
 
 class FusedBackend:
     """Persistent packed (T+1, Q, n) state + the fused Pallas kernel.
@@ -268,16 +311,18 @@ class FusedBackend:
 
         types = np.full((t + 1, n), SOLID, np.uint8)
         types[:t] = tiling.node_types
+        self._types_np = types                       # host copy for ensembles
         self._types = jnp.asarray(types)
-        self._nbrs = jnp.asarray(build_neighbor_table(tiling, cfg.periodic))
+        self._nbrs_np = build_neighbor_table(tiling, cfg.periodic)
+        self._nbrs = jnp.asarray(self._nbrs_np)
         self._solid = jnp.asarray(tiling.node_types == SOLID)
 
         self._bc = None
-        bc_tabs = (boundary_pass_tables(
+        self._bc_np = (boundary_pass_tables(
             tiling.node_types, tables.gather_idx, cfg.boundaries, q, n)
             if cfg.boundaries and cfg.kernel_mode == "full" else None)
-        if bc_tabs is not None:
-            bt, packed, type_masks, solid_b = bc_tabs
+        if self._bc_np is not None:
+            bt, packed, type_masks, solid_b = self._bc_np
             self._bc = {
                 "tiles": jnp.asarray(bt),
                 "gather": jnp.asarray(packed),
@@ -285,6 +330,7 @@ class FusedBackend:
                 "solid": jnp.asarray(solid_b),
                 "specs": tuple(spec for _, spec in cfg.boundaries),
             }
+        self._ens_tables: dict[int, tuple] = {}
 
     # ------------------------------------------------------------ state
     def initial_state(self, feq_canon: jnp.ndarray) -> jnp.ndarray:
@@ -312,3 +358,80 @@ class FusedBackend:
                 f, out, self.lat, cfg.collision, cfg.force, tab["specs"],
                 tab["tiles"], tab["gather"], tab["type_masks"], tab["solid"])
         return out
+
+    # ------------------------------------------------- ensemble (B states)
+    def _ensemble_tables(self, batch: int):
+        """Replicated kernel tables for a B-replicated packed state.
+
+        Replica b's tiles occupy rows [b*T, (b+1)*T); the single scratch
+        row moves to index B*T.  The neighbour table gets the per-replica
+        row offset folded in (scratch references remapped to B*T), and the
+        NEBB boundary tables get the matching packed-flat offset
+        ``b * T * Q * n``, so :func:`nebb_boundary_pass` runs unmodified
+        over all replicas' boundary tiles in one pass.
+        """
+        if batch in self._ens_tables:
+            return self._ens_tables[batch]
+        t, n = self.tiling.num_tiles, self.tiling.nodes_per_tile
+        q = self.lat.q
+        nbrs = np.concatenate(
+            [np.where(self._nbrs_np == t, batch * t, self._nbrs_np + b * t)
+             for b in range(batch)]).astype(np.int32)
+        types = np.concatenate([self._types_np[:t]] * batch
+                               + [self._types_np[t:]])
+        bc = None
+        if self._bc_np is not None:
+            bt, packed, type_masks, solid_b = self._bc_np
+            bc = {
+                "tiles": jnp.asarray(np.concatenate(
+                    [bt + b * t for b in range(batch)]).astype(np.int32)),
+                "gather": jnp.asarray(np.concatenate(
+                    [packed + b * t * q * n for b in range(batch)], axis=1)),
+                "type_masks": jnp.asarray(
+                    np.concatenate([type_masks] * batch, axis=1)),
+                "solid": jnp.asarray(np.concatenate([solid_b] * batch)),
+                "specs": self._bc["specs"],
+            }
+        self._ens_tables[batch] = (jnp.asarray(types), jnp.asarray(nbrs), bc)
+        return self._ens_tables[batch]
+
+    def ensemble_state(self, f_single: jnp.ndarray, batch: int) -> jnp.ndarray:
+        """(T+1, Q, n) packed state -> (B*T + 1, Q, n) B-replicated."""
+        return jnp.concatenate([f_single[:-1]] * batch + [f_single[-1:]])
+
+    def ensemble_step(self, f: jnp.ndarray) -> jnp.ndarray:
+        """One fused-kernel step over all B replicas in a single pallas_call
+        (grid = B*T); B is inferred from the state shape."""
+        from repro.kernels.stream_collide import stream_collide_tiles
+
+        cfg = self.cfg
+        batch = (f.shape[0] - 1) // self.tiling.num_tiles
+        types, nbrs, bc = self._ensemble_tables(batch)
+        out = stream_collide_tiles(
+            f, types, nbrs, self.lat, cfg.collision,
+            a=cfg.a, force=cfg.force, interpret=self.interpret,
+            mode=cfg.kernel_mode, node_order=cfg.node_order)
+        if bc is not None:
+            out = nebb_boundary_pass(
+                f, out, self.lat, cfg.collision, cfg.force, bc["specs"],
+                bc["tiles"], bc["gather"], bc["type_masks"], bc["solid"])
+        return out
+
+    def ensemble_canonical(self, f: jnp.ndarray) -> jnp.ndarray:
+        """(B*T + 1, Q, n) -> (B, Q, T, n) for diagnostics."""
+        t = self.tiling.num_tiles
+        batch = (f.shape[0] - 1) // t
+        return jnp.swapaxes(f[:-1].reshape(batch, t, *f.shape[1:]), 1, 2)
+
+    def ensemble_get(self, f: jnp.ndarray, b: int) -> jnp.ndarray:
+        """Extract replica ``b`` as a single-engine packed state (own zero
+        scratch row appended)."""
+        t = self.tiling.num_tiles
+        body = jax.lax.dynamic_slice_in_dim(f, b * t, t, axis=0)
+        return jnp.concatenate([body, jnp.zeros_like(f[:1])])
+
+    def ensemble_set(self, f: jnp.ndarray, b: int,
+                     f_single: jnp.ndarray) -> jnp.ndarray:
+        t = self.tiling.num_tiles
+        return jax.lax.dynamic_update_slice(
+            f, f_single[:-1].astype(f.dtype), (b * t, 0, 0))

@@ -153,6 +153,21 @@ class SparseTiledLBM:
         """
         self.f = self.backend.initial_state(self._initial_feq())
 
+    # -------------------------------------------------------------- ensemble
+    def ensemble(self, batch: int):
+        """B independent flow states over THIS engine's tiling and stream
+        tables, advanced in one dispatch per step (``repro.sim.ensemble``).
+
+        The returned :class:`~repro.sim.ensemble.EnsembleLBM` shares the
+        engine's geometry products (tiling, streaming tables, backend
+        tables) — only the state carries a batch axis — which is exactly
+        the amortisation the follow-up paper (arXiv:1703.08015) shows the
+        sparse indirection tables need.
+        """
+        from repro.sim.ensemble import EnsembleLBM
+
+        return EnsembleLBM(self, batch)
+
     # ------------------------------------------------------------------ step
     def step(self, steps: int = 1) -> None:
         for _ in range(steps):

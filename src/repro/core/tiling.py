@@ -305,6 +305,49 @@ class Tiling:
                 self.neighbor_index_distance_hist(),
         }
 
+    def intra_tile_link_distances(self, e: np.ndarray | None = None
+                                  ) -> np.ndarray:
+        """|src slot - dst slot| over every statically intra-tile link.
+
+        The within-tile analogue of ``StreamTables.mean_link_distance``:
+        for each moving direction whose pull source stays inside the tile,
+        the distance between the two ends of the link in the STORAGE slot
+        order — the quantity ``node_order`` reshapes (node-order-aware: a
+        'sfc' or 'frontier_last' enumeration changes these distances, the
+        tile traversal policy does not).  Static over all tiles — every
+        tile shares the one (a^3,) slot permutation, so no per-tile pass
+        is needed.
+
+        ``e``: (Q, 3) lattice velocity set; defaults to the full 26-point
+        unit stencil (the superset every |e| <= 1 lattice draws from).
+        """
+        a = self.a
+        if e is None:
+            e = NEIGHBOR_OFFSETS
+        sigma = self.node_perm                       # canonical -> slot
+        c = self.node_of_slot                        # slot -> canonical
+        x, y, z = c % a, (c // a) % a, c // (a * a)  # coords per slot
+        slots = np.arange(a ** 3, dtype=np.int64)
+        out = []
+        for eq in np.asarray(e, np.int64):
+            if not eq.any():
+                continue
+            sx, sy, sz = x - eq[0], y - eq[1], z - eq[2]
+            intra = ((sx >= 0) & (sx < a) & (sy >= 0) & (sy < a)
+                     & (sz >= 0) & (sz < a))
+            src = sigma[(sx + a * sy + a * a * sz)[intra]]
+            out.append(np.abs(src - slots[intra]))
+        return (np.concatenate(out) if out
+                else np.zeros(0, dtype=np.int64))
+
+    def mean_intra_tile_link_distance(self, e: np.ndarray | None = None
+                                      ) -> float:
+        """Mean storage-slot distance of intra-tile links (ROADMAP's
+        within-tile locality metric; reported per row by
+        benchmarks/geometry_suite.py with the engine's actual lattice)."""
+        d = self.intra_tile_link_distances(e)
+        return float(d.mean()) if d.size else 0.0
+
     def node_coords(self) -> np.ndarray:
         """Global (x, y, z) for every (tile, node) slot — (T, a^3, 3) int32.
 

@@ -1,0 +1,174 @@
+"""Simulation-serving launcher: stand :class:`repro.sim.service.SimService`
+up over the launcher's geometry cases and report ensemble throughput.
+
+    # serve 3 sessions each on two geometries, 2 fixed slots per group
+    PYTHONPATH=src python -m repro.launch.sim_serve \
+        --cases duct,channel2d --sessions 3 --slots 2 --steps 50
+
+    # throughput vs ensemble width (the amortisation curve)
+    PYTHONPATH=src python -m repro.launch.sim_serve \
+        --cases spheres --sessions 4 --sweep-slots 1,2,4 --steps 50
+
+    # checkpointed serving: save every 20 steps, later resume
+    PYTHONPATH=src python -m repro.launch.sim_serve --cases duct \
+        --checkpoint-root /tmp/simckpt --checkpoint-every 20
+    PYTHONPATH=src python -m repro.launch.sim_serve \
+        --checkpoint-root /tmp/simckpt --restore
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+from repro.core import collision as C
+from repro.core.engine import LBMConfig
+from repro.launch.lbm import CASES, make_case
+from repro.sim.service import SimService
+
+
+def case_config(case, args) -> LBMConfig:
+    return LBMConfig(
+        lattice=case.lattice,
+        collision=C.CollisionConfig(model=args.collision, tau=args.tau),
+        layout_scheme="xyz" if args.backend == "fused" else "paper",
+        dtype=args.dtype, boundaries=case.boundaries, periodic=case.periodic,
+        force=case.force, backend=args.backend,
+        split_stream=args.split_stream)
+
+
+def submit_cases(svc: SimService, args) -> list[int]:
+    sids = []
+    for name in args.cases.split(","):
+        case = make_case(name, args.scale)
+        cfg = case_config(case, args)
+        for i in range(args.sessions):
+            # staggered budgets exercise the slot-refill path
+            sids.append(svc.submit(case.geometry, cfg,
+                                   steps=args.steps + i * args.stagger))
+    return sids
+
+
+def warm_and_snapshot(svc: SimService) -> dict:
+    """Run one admission+step so every group's batched step is compiled
+    OUTSIDE the throughput window, then snapshot EVERY session's
+    steps_done (active, queued, even warm-finished) so the MFLUPS
+    numerator counts exactly the steps run inside the timed window."""
+    svc.step(1)
+    start = {s.sid: s.steps_done for s in svc.finished}
+    start.update({s.sid: s.steps_done
+                  for g in svc.groups.values() for s in g.active if s})
+    start.update({s.sid: s.steps_done for s in svc.queue})
+    return start
+
+
+def serve_once(args, slots: int, registry=None) -> dict:
+    svc = SimService(slots=slots, registry=registry,
+                     checkpoint_root=args.checkpoint_root)
+    submit_cases(svc, args)
+    start_steps = warm_and_snapshot(svc)
+    t0 = time.perf_counter()
+    finished = svc.run(checkpoint_every=args.checkpoint_every)
+    wall = time.perf_counter() - t0
+    return report(svc, finished, wall, slots, start_steps=start_steps)
+
+
+def report(svc: SimService, finished, wall: float, slots: int,
+           start_steps: dict | None = None) -> dict:
+    """Aggregate throughput over the work done in THIS run: on a restored
+    service, ``start_steps`` (sid -> steps_done at restore) excludes the
+    pre-kill steps from the MFLUPS numerator."""
+    start_steps = start_steps or {}
+    updates = 0
+    for sess in finished:
+        eng = svc.groups[sess.engine_key].entry.engine
+        updates += ((sess.steps_done - start_steps.get(sess.sid, 0))
+                    * eng.n_fluid_nodes)
+    out = {
+        "slots": slots,
+        "sessions_finished": len(finished),
+        "wall_s": round(wall, 3),
+        "aggregate_mflups": round(updates / wall / 1e6, 4) if wall else 0.0,
+        "registry": svc.registry.stats(),
+        "results": [s.result for s in sorted(finished, key=lambda s: s.sid)],
+    }
+    print(f"slots={slots} finished={len(finished)} wall={wall:.2f}s "
+          f"aggregate={out['aggregate_mflups']} MFLUPS "
+          f"compiled_engines={svc.registry.compiled_count}")
+    for r in out["results"]:
+        print(f"  sid={r['sid']} steps={r['steps']} mass={r['mass']:.6f} "
+              f"drift={r['mass_drift']:.2e} mean|u|={r['mean_speed']:.2e}")
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cases", default="duct",
+                    help=f"comma-separated subset of {CASES}")
+    ap.add_argument("--sessions", type=int, default=3,
+                    help="sessions submitted per case")
+    ap.add_argument("--slots", type=int, default=2,
+                    help="fixed ensemble slots per (geometry, config) group")
+    ap.add_argument("--sweep-slots", default=None, dest="sweep_slots",
+                    help="comma-separated slot widths: serve the same load "
+                         "once per width and report aggregate MFLUPS vs B")
+    ap.add_argument("--steps", type=int, default=50,
+                    help="base per-session step budget")
+    ap.add_argument("--stagger", type=int, default=5,
+                    help="budget increment between a case's sessions "
+                         "(staggered finishes exercise slot refill)")
+    ap.add_argument("--scale", type=int, default=1)
+    ap.add_argument("--tau", type=float, default=0.6)
+    ap.add_argument("--collision", default="lbgk", choices=["lbgk", "lbmrt"])
+    ap.add_argument("--dtype", default="float32")
+    ap.add_argument("--backend", default="gather",
+                    choices=["gather", "fused"])
+    ap.add_argument("--split-stream", action="store_true",
+                    dest="split_stream")
+    ap.add_argument("--checkpoint-root", default=None, dest="checkpoint_root")
+    ap.add_argument("--checkpoint-every", type=int, default=0,
+                    dest="checkpoint_every")
+    ap.add_argument("--restore", action="store_true",
+                    help="resume every session from the latest committed "
+                         "checkpoint under --checkpoint-root")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+
+    if args.restore:
+        assert args.checkpoint_root, "--restore needs --checkpoint-root"
+        svc = SimService.restore(args.checkpoint_root, slots=args.slots)
+        start_steps = warm_and_snapshot(svc)
+        t0 = time.perf_counter()
+        finished = svc.run(checkpoint_every=args.checkpoint_every)
+        results = [report(svc, finished, time.perf_counter() - t0,
+                          args.slots, start_steps=start_steps)]
+    elif args.sweep_slots:
+        from repro.sim.registry import EngineRegistry
+
+        if args.checkpoint_root:
+            # the sweep would interleave every width's saves in one root
+            # and the keep-newest gc would leave --restore resuming an
+            # arbitrary width's sessions
+            raise SystemExit(
+                "--sweep-slots cannot be combined with --checkpoint-root; "
+                "checkpoint a single-width serve instead")
+        registry = EngineRegistry()        # share compiled engines across B
+        results = [serve_once(args, int(b), registry=registry)
+                   for b in args.sweep_slots.split(",")]
+        print("B -> aggregate MFLUPS: "
+              + ", ".join(f"{r['slots']}:{r['aggregate_mflups']}"
+                          for r in results))
+    else:
+        results = [serve_once(args, args.slots)]
+
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -79,16 +79,27 @@ class ServeEngine:
                     slot, axis=1)
                 if full.ndim >= 2 else full,
                 self.cache, cache1)
-            first = self._sample(logits[:, 0])[0]
+            first = self._sample(logits[:, 0], [req.temperature])[0]
             req.out_tokens.append(int(first))
             self.active[slot] = req
             self.positions[slot] = plen
 
-    def _sample(self, logits):
-        if logits.ndim == 3:        # audio (B, K, V)
-            logits = logits
+    def _sample(self, logits, temperatures):
+        """Per-slot sampling: greedy at temperature 0, else categorical
+        over ``logits / T`` with a fresh split of the engine PRNG key.
+
+        logits: (B, V); temperatures: length-B sequence (one per slot —
+        requests carry their own ``Request.temperature``).
+        """
         self.key, sub = jax.random.split(self.key)
-        return np.asarray(jnp.argmax(logits, axis=-1)).reshape(-1)
+        temps = np.asarray(temperatures, np.float32).reshape(-1)
+        greedy = np.asarray(jnp.argmax(logits, axis=-1)).reshape(-1)
+        if not (temps > 0).any():
+            return greedy
+        scaled = logits / jnp.maximum(jnp.asarray(temps)[:, None], 1e-6)
+        sampled = np.asarray(
+            jax.random.categorical(sub, scaled, axis=-1)).reshape(-1)
+        return np.where(temps > 0, sampled, greedy)
 
     def step(self):
         """One decode step for all occupied slots."""
@@ -106,7 +117,9 @@ class ServeEngine:
         logits, self.cache = self._decode(
             self.params, jnp.asarray(toks), self.cache,
             jnp.asarray(idx, jnp.int32))
-        nxt = self._sample(logits[:, 0])
+        temps = [self.active[i].temperature if self.active[i] else 0.0
+                 for i in range(self.slots)]
+        nxt = self._sample(logits[:, 0], temps)
         for i in occupied:
             req = self.active[i]
             req.out_tokens.append(int(nxt[i]))

@@ -1,0 +1,28 @@
+"""repro.sim — multi-tenant batched LBM simulation serving.
+
+Three layers, each usable on its own:
+
+* :mod:`repro.sim.registry` — compiled-engine registry: one
+  :class:`~repro.core.engine.SparseTiledLBM` (tiling + stream tables +
+  jitted step) per distinct ``(geometry fingerprint, LBMConfig
+  signature)``, shared by every session on that geometry.
+* :mod:`repro.sim.ensemble` — :class:`EnsembleLBM`: B independent flow
+  states over ONE geometry's tables, advanced in a single dispatch per
+  step (the indirection-table amortisation of arXiv:1703.08015).
+* :mod:`repro.sim.service` — :class:`SimService`: fixed-slot session
+  manager (submit / step / collect) with per-session step budgets, probe
+  readouts, and checkpoint/resume through
+  :class:`repro.checkpoint.store.CheckpointStore`.
+"""
+from .ensemble import EnsembleLBM
+from .registry import EngineRegistry, config_signature, geometry_fingerprint
+from .service import SimService, SimSession
+
+__all__ = [
+    "EnsembleLBM",
+    "EngineRegistry",
+    "SimService",
+    "SimSession",
+    "config_signature",
+    "geometry_fingerprint",
+]

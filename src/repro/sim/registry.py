@@ -1,0 +1,133 @@
+"""Compiled-engine registry: one engine per (geometry, config) key.
+
+An LBM "compile" is expensive twice over: the host-side tiler + stream
+tables (linear in the geometry, but megabytes of numpy) and the jitted
+step program.  Concurrent sessions on the SAME geometry must not pay it
+per session — the registry canonicalises ``(node_type hash, LBMConfig
+signature)`` into one :class:`EngineEntry` whose tiling, (split-)stream
+tables and jitted step every session shares.  Live flow state is NOT
+cached here — each consumer builds its own
+:class:`~repro.sim.ensemble.EnsembleLBM` from the shared engine, so two
+services sharing a registry can never step each other's tenants.
+
+The config signature is derived from the full nested dataclass tree
+(``CollisionConfig``, ``BoundarySpec`` tuples included), so any knob that
+changes the compiled step — backend, split_stream, orders, dtype,
+boundaries — produces a distinct entry, while re-submitting the same
+geometry + config always hits the cache (``tests/progs/sim_serve_smoke.py``
+asserts exactly-N compiles end to end).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+
+import numpy as np
+
+from repro.core import collision as col
+from repro.core.boundary import BoundarySpec
+from repro.core.engine import LBMConfig, SparseTiledLBM
+
+
+def geometry_fingerprint(node_type: np.ndarray) -> str:
+    """Content hash of a dense uint8 node-type array (shape included)."""
+    g = np.ascontiguousarray(np.asarray(node_type, np.uint8))
+    h = hashlib.sha1()
+    h.update(repr(g.shape).encode())
+    h.update(g.tobytes())
+    return h.hexdigest()[:16]
+
+
+def config_to_dict(cfg: LBMConfig) -> dict:
+    """LBMConfig -> JSON-serialisable dict (nested dataclasses flattened).
+
+    Inverse of :func:`config_from_dict`; also the basis of
+    :func:`config_signature` and of the session-checkpoint manifest
+    (``repro.sim.service``), so a restored service reconstructs the exact
+    engine key it checkpointed under.
+    """
+    return dataclasses.asdict(cfg)
+
+
+def config_from_dict(d: dict) -> LBMConfig:
+    """Rebuild an LBMConfig from :func:`config_to_dict` output (JSON
+    round-trip safe: lists re-tupled, nested dataclasses re-hydrated)."""
+    d = dict(d)
+    d["collision"] = col.CollisionConfig(**d["collision"])
+    d["boundaries"] = tuple(
+        (int(tv), BoundarySpec(kind=s["kind"], normal=tuple(s["normal"]),
+                               velocity=tuple(s["velocity"]),
+                               rho=float(s["rho"])))
+        for tv, s in d["boundaries"])
+    d["periodic"] = tuple(bool(p) for p in d["periodic"])
+    d["u0"] = tuple(float(v) for v in d["u0"])
+    if d.get("force") is not None:
+        d["force"] = tuple(float(v) for v in d["force"])
+    return LBMConfig(**d)
+
+
+def config_signature(cfg: LBMConfig) -> str:
+    """Stable hash of the full config tree (the jit-relevant identity)."""
+    blob = json.dumps(config_to_dict(cfg), sort_keys=True, default=str)
+    return hashlib.sha1(blob.encode()).hexdigest()[:16]
+
+
+@dataclasses.dataclass
+class EngineEntry:
+    """One compiled geometry+config: the shared (immutable) engine tables.
+
+    The entry deliberately holds NO flow state: ensembles carry live
+    per-session state, so every consumer (a SimService group, a
+    benchmark) builds its own via ``entry.engine.ensemble(batch)`` —
+    sharing one through the registry would let two services step each
+    other's tenants.  What IS shared is everything expensive: tiling,
+    stream tables, backend tables, and the engine's jitted scalar step.
+    """
+
+    key: tuple[str, str]                     # (geometry fp, config sig)
+    engine: SparseTiledLBM
+    # sessions seated on this entry — recorded EXPLICITLY by consumers
+    # (SimService bumps once per seat); get() itself never counts, so
+    # validation peeks and diagnostics cannot skew the stat
+    hits: int = 0
+
+
+class EngineRegistry:
+    def __init__(self):
+        self._entries: dict[tuple[str, str], EngineEntry] = {}
+
+    def key_for(self, node_type: np.ndarray,
+                cfg: LBMConfig) -> tuple[str, str]:
+        return (geometry_fingerprint(node_type), config_signature(cfg))
+
+    def get(self, node_type: np.ndarray, cfg: LBMConfig) -> EngineEntry:
+        """The entry for (geometry, config) — compiled on first miss.
+
+        Pure lookup: callers that SEAT a session on the entry record the
+        hit themselves (``entry.hits += 1``)."""
+        key = self.key_for(node_type, cfg)
+        entry = self._entries.get(key)
+        if entry is None:
+            entry = EngineEntry(key=key,
+                                engine=SparseTiledLBM(np.asarray(node_type),
+                                                      cfg))
+            self._entries[key] = entry
+        return entry
+
+    @property
+    def compiled_count(self) -> int:
+        return len(self._entries)
+
+    def stats(self) -> dict:
+        """JSON-ready registry summary (surfaced by launch/sim_serve.py)."""
+        return {
+            "compiled_engines": self.compiled_count,
+            "hits": sum(e.hits for e in self._entries.values()),
+            "entries": [
+                {"geometry": k[0], "config": k[1], "hits": e.hits,
+                 "num_tiles": e.engine.tiling.num_tiles,
+                 "n_fluid_nodes": e.engine.n_fluid_nodes}
+                for k, e in self._entries.items()
+            ],
+        }

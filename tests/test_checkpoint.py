@@ -68,6 +68,76 @@ def test_elastic_restore_resharding(tmp_path):
     np.testing.assert_array_equal(np.asarray(out["params"]["w"]), t["w"])
 
 
+def test_lbm_state_dtype_roundtrip(tmp_path):
+    """LBM session payloads survive the raw-byte shard format exactly:
+    float64 populations, int32 index tables, uint8 geometry — dtype,
+    shape and every bit preserved."""
+    store = CheckpointStore(str(tmp_path))
+    rng = np.random.default_rng(3)
+    tree = {
+        "f": rng.standard_normal((19, 7, 64)),             # float64
+        "gather_idx": rng.integers(0, 19 * 7 * 64,
+                                   (19, 7, 64)).astype(np.int32),
+        "geometry": rng.integers(0, 4, (12, 12, 12)).astype(np.uint8),
+    }
+    store.save(2, {"session": tree}, extra={"sid": 0})
+    assert store.verify(2)
+    out, _ = store.restore(2, {"session": tree})
+    for key, arr in tree.items():
+        got = out["session"][key]
+        assert got.dtype == arr.dtype, key
+        np.testing.assert_array_equal(got, arr, err_msg=key)
+
+
+def test_restore_trees_from_manifest_alone(tmp_path):
+    """restore_trees rebuilds nested dict trees purely from the manifest
+    (no caller-side tree_likes) — the session restore path's API."""
+    store = CheckpointStore(str(tmp_path))
+    tree = {"f": np.arange(12.0).reshape(3, 4),
+            "nested": {"idx": np.arange(5, dtype=np.int32)}}
+    store.save(1, {"s0": tree, "geometries": {"abc": np.ones(3, np.uint8)}},
+               extra={"k": 1})
+    out, extra = store.restore_trees(1)
+    assert extra == {"k": 1}
+    np.testing.assert_array_equal(out["s0"]["f"], tree["f"])
+    np.testing.assert_array_equal(out["s0"]["nested"]["idx"],
+                                  tree["nested"]["idx"])
+    assert out["geometries"]["abc"].dtype == np.uint8
+
+
+def test_torn_recovery_through_session_restore(tmp_path):
+    """The new session restore path (repro.sim.service) recovers from a
+    torn save: a checkpoint directory missing COMMITTED is skipped and the
+    previous good step is restored bit-exactly."""
+    from jax.experimental import enable_x64
+
+    from repro.core.engine import LBMConfig
+    from repro.sim.service import SimService
+
+    with enable_x64(True):
+        cfg = LBMConfig(layout_scheme="paper", dtype="float64",
+                        periodic=(True, True, True), backend="gather")
+        g = np.ones((8, 8, 8), np.uint8)
+        root = str(tmp_path / "sessions")
+        svc = SimService(slots=1, checkpoint_root=root)
+        svc.submit(g, cfg, steps=5)
+        svc.step(3)
+        svc.checkpoint()
+        good = np.asarray(svc.live_sessions()[0][1])
+        svc.step(1)
+        torn = svc.checkpoint()
+        os.remove(os.path.join(torn, COMMITTED))
+
+        svc2 = SimService.restore(root, slots=1)
+        sess, f = svc2.live_sessions()[0]
+        assert sess.steps_done == 3                 # the good step, not 4
+        np.testing.assert_array_equal(f, good)
+        assert f.dtype == np.float64
+        finished = svc2.run()
+        assert finished[0].result["steps"] == 5
+        assert finished[0].result["mass_drift"] < 1e-12
+
+
 def test_restart_reproduces_data_stream(tmp_path):
     from repro.data.tokens import DataConfig, TokenPipeline
     cfg = DataConfig(vocab_size=97, seq_len=32, global_batch=4, seed=5)
