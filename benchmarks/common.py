@@ -14,15 +14,24 @@ number).  ``mflups_dispatch`` re-times the same engine through
 ``eng.step()`` one jit call per iteration, which is what a host-driven
 loop would pay; the old implementation reported ONLY that number, silently
 inflating seconds-per-step with Python/jit dispatch overhead.
+
+Measurement substrate: there is ONE timing implementation — the
+:mod:`repro.obs` span recorder.  ``timed_mflups`` collects into private
+``MetricRegistry``/``SpanRecorder`` instances (via ``obs.use``, so the
+global collectors and other engines are untouched), times the measurement
+windows as spans (``lbm.bench.run`` / ``lbm.bench.dispatch``), and derives
+every reported number from those spans plus the engine's modelled
+``model_metrics()``.  The registry/recorder ride along on the returned
+:class:`TimedRun` (``.metrics`` / ``.trace``) so benchmark drivers can
+export the raw JSONL/Chrome-trace artifacts per configuration.
 """
 from __future__ import annotations
 
 import dataclasses
-import time
 
 import jax
-import numpy as np
 
+from repro import obs
 from repro.core import collision as C
 from repro.core.engine import LBMConfig, SparseTiledLBM
 
@@ -60,6 +69,14 @@ class TimedRun:
     # scaled by the solid slots in tiles) + the indirection tables the
     # step's streaming loads, per fluid node
     model_bytes_per_node: float = 0.0
+    # per-phase host-span breakdown: {span name: {"count", "seconds"}} —
+    # dispatch-level attribution (the measurement windows, engine spans);
+    # per-phase DEVICE time needs an XLA profile with the obs named scopes
+    # (see README Observability)
+    phases: dict = dataclasses.field(default_factory=dict)
+    # the run's private collectors, for JSONL / Chrome-trace export
+    metrics: obs.MetricRegistry | None = None
+    trace: obs.SpanRecorder | None = None
 
     def __iter__(self):      # allow ``mf, eng = timed_mflups(...)``
         return iter((self.mflups, self.eng))
@@ -89,44 +106,60 @@ def timed_mflups(geometry, *, mode="full", model="lbgk",
         dtype=dtype, kernel_mode=mode, backend=backend,
         boundaries=boundaries, periodic=periodic, tile_order=tile_order,
         force=force, node_order=node_order, split_stream=split_stream)
-    eng = SparseTiledLBM(geometry, cfg)
 
-    # kernel-only: everything inside one jitted fori_loop.  Warm with the
-    # SAME step count so the timed call reuses the compiled loop (warming
-    # with a different count would leave the timed one cold and put the
-    # compile inside the measurement window).
-    for _ in range(max(1, -(-warmup // steps))):
-        eng.run(steps)
-    jax.block_until_ready(eng.f)
-    t0 = time.perf_counter()
-    eng.run(steps)
-    jax.block_until_ready(eng.f)
-    dt_run = (time.perf_counter() - t0) / steps
+    reg = obs.MetricRegistry()
+    rec = obs.SpanRecorder()
+    with obs.use(metrics=reg, trace=rec):
+        eng = SparseTiledLBM(geometry, cfg)
 
-    # dispatch-included: one Python->jit round-trip per step.  Skippable
-    # (``dispatch=False``) because it compiles a SECOND program per
-    # configuration — prohibitive for interpret-mode sweep jobs like the
-    # CI geometry suite.
-    dt_step = None
-    if dispatch:
-        eng.step(1)
+        # kernel-only: everything inside one jitted fori_loop.  Warm with
+        # the SAME step count so the timed call reuses the compiled loop
+        # (warming with a different count would leave the timed one cold
+        # and put the compile inside the measurement window).
+        for _ in range(max(1, -(-warmup // steps))):
+            eng.run(steps)
         jax.block_until_ready(eng.f)
-        t0 = time.perf_counter()
-        eng.step(steps)
-        jax.block_until_ready(eng.f)
-        dt_step = (time.perf_counter() - t0) / steps
+        rec.reset()                      # drop the warmup spans
+        reg.reset()
+        with rec.span("lbm.bench.run", steps=steps):
+            eng.run(steps)
+            jax.block_until_ready(eng.f)
+        dt_run = rec.find("lbm.bench.run")[0].seconds / steps
 
-    # paper Eqn (10): the minimum traffic is one read + one write of every
-    # fluid node's Q populations per step
-    min_bytes = 2 * eng.lat.q * eng.n_fluid_nodes * eng.dtype.itemsize
+        # dispatch-included: one Python->jit round-trip per step.
+        # Skippable (``dispatch=False``) because it compiles a SECOND
+        # program per configuration — prohibitive for interpret-mode
+        # sweep jobs like the CI geometry suite.
+        dt_step = None
+        if dispatch:
+            eng.step(1)
+            jax.block_until_ready(eng.f)
+            with rec.span("lbm.bench.dispatch", steps=steps):
+                eng.step(steps)
+                jax.block_until_ready(eng.f)
+            dt_step = rec.find("lbm.bench.dispatch")[0].seconds / steps
+
+        model = eng.model_metrics()
+        # paper Eqn (10): the minimum traffic is one read + one write of
+        # every fluid node's Q populations per step
+        min_bytes = model["lbm.bw.eqn10_min_bytes"]
+        reg.gauge("lbm.step.seconds").set(dt_run)
+        reg.gauge("lbm.step.mflups").set(eng.mflups(dt_run))
+        if dt_step is not None:
+            reg.gauge("lbm.step.mflups_dispatch").set(eng.mflups(dt_step))
+        reg.gauge("lbm.bw.achieved_gbs").set(min_bytes / dt_run / 1e9)
+        for name, v in model.items():
+            reg.gauge(name).set(v)
+
     return TimedRun(
-        mflups=eng.n_fluid_nodes / dt_run / 1e6,
+        mflups=reg.value("lbm.step.mflups"),
         mflups_dispatch=(None if dt_step is None
-                         else eng.n_fluid_nodes / dt_step / 1e6),
+                         else reg.value("lbm.step.mflups_dispatch")),
         seconds_per_step=dt_run,
         seconds_per_step_dispatch=dt_step,
         eng=eng,
-        bandwidth_gbs=min_bytes / dt_run / 1e9,
-        model_bytes_per_node=(eng.bytes_per_step()
-                              + eng.index_bytes_per_step())
-        / max(1, eng.n_fluid_nodes))
+        bandwidth_gbs=reg.value("lbm.bw.achieved_gbs"),
+        model_bytes_per_node=reg.value("lbm.bytes.model_per_node"),
+        phases=rec.aggregate(),
+        metrics=reg,
+        trace=rec)

@@ -1,0 +1,162 @@
+"""Regression gate over the engine's MODELLED obs metrics.
+
+Compares ``SparseTiledLBM.model_metrics()`` — the deterministic,
+hardware-independent traffic/structure numbers emitted under the
+canonical ``repro.obs`` names — against a committed baseline
+(``benchmarks/baselines/obs_baseline.json``) with direction-aware
+tolerances, and exits non-zero on regression.  Because every gated
+quantity is computed from static host tables (engine construction never
+triggers jit), the gate runs in seconds on a CPU CI runner, yet it
+catches the structural regressions that actually move GPU/TPU bandwidth
+utilisation: a tiling or streaming change that drops ``eqn10_fraction``,
+inflates the indirection tables, or grows the frontier.
+
+    # check against the committed baseline (CI)
+    python -m benchmarks.regression_gate
+
+    # after an INTENDED change, refresh the baseline and commit it
+    python -m benchmarks.regression_gate --update
+
+Rows cover the deterministic geometry cases x representative engine
+configs; 'spheres' is excluded (random geometry, not reproducible across
+numpy versions).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+BASELINE = os.path.join(os.path.dirname(__file__), "baselines",
+                        "obs_baseline.json")
+
+# (case, backend, split_stream, tile_order, node_order) — deterministic
+# geometries only; each row exercises a distinct streaming/data-placement
+# regime so a regression in any one structure shows up somewhere.
+ROWS = (
+    ("cavity", "gather", False, "zmajor", "canonical"),
+    ("duct", "gather", True, "zmajor", "frontier_last"),
+    ("vessel", "gather", True, "hilbert", "sfc"),
+    ("channel2d", "gather", True, "zmajor", "canonical"),
+    ("aorta", "fused", False, "morton", "canonical"),
+)
+
+# metric -> (direction, rel_tolerance).  'higher' means higher is better:
+# the gate fails when the current value drops more than tol below the
+# baseline (improvements never fail and should be --update'd in).
+GATED = {
+    "lbm.bw.eqn10_fraction": ("higher", 0.01),
+    "lbm.stream.frontier_frac": ("lower", 0.02),
+    "lbm.index.bytes_per_node": ("lower", 0.01),
+    "lbm.tiles.utilisation": ("higher", 0.01),
+}
+
+
+def row_key(row) -> str:
+    case, backend, split, torder, norder = row
+    stream = "split" if split else "mono"
+    return f"{case}/{backend}/{stream}/{torder}/{norder}"
+
+
+def compute_rows() -> dict[str, dict[str, float]]:
+    """{row key: model_metrics} for every gated row.  Engine construction
+    builds host tables only (jax.jit is lazy), so this is numpy work."""
+    from repro.core import collision as C
+    from repro.core.engine import LBMConfig, SparseTiledLBM
+    from repro.launch.lbm import make_case
+
+    out = {}
+    for row in ROWS:
+        case_name, backend, split, torder, norder = row
+        case = make_case(case_name)
+        cfg = LBMConfig(
+            lattice=case.lattice,
+            collision=C.CollisionConfig(tau=0.6),
+            layout_scheme="xyz" if backend == "fused" else "paper",
+            boundaries=case.boundaries, periodic=case.periodic,
+            force=case.force, backend=backend, split_stream=split,
+            tile_order=torder, node_order=norder)
+        eng = SparseTiledLBM(case.geometry, cfg)
+        out[row_key(row)] = eng.model_metrics()
+    return out
+
+
+def check(current: dict, baseline: dict) -> list[str]:
+    failures = []
+    for key, metrics in current.items():
+        base = baseline.get(key)
+        if base is None:
+            failures.append(f"{key}: no baseline row (run --update)")
+            continue
+        for name, (direction, tol) in GATED.items():
+            cur, ref = metrics[name], base.get(name)
+            if ref is None:
+                failures.append(f"{key}: {name} missing from baseline")
+                continue
+            scale = max(abs(ref), 1e-12)
+            if direction == "higher" and cur < ref - tol * scale:
+                failures.append(
+                    f"{key}: {name} regressed {ref:.6g} -> {cur:.6g} "
+                    f"(higher is better, tol {tol:.0%})")
+            elif direction == "lower" and cur > ref + tol * scale:
+                failures.append(
+                    f"{key}: {name} regressed {ref:.6g} -> {cur:.6g} "
+                    f"(lower is better, tol {tol:.0%})")
+    for key in baseline:
+        if key not in current:
+            failures.append(f"{key}: baseline row no longer computed "
+                            f"(run --update)")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite the committed baseline from the current "
+                         "tree (review the diff before committing)")
+    ap.add_argument("--metrics-out", default=None, dest="metrics_out",
+                    help="also export the current rows as obs JSONL")
+    args = ap.parse_args(argv)
+
+    current = compute_rows()
+
+    if args.metrics_out:
+        from repro.obs import MetricRegistry
+
+        reg = MetricRegistry()
+        for key, metrics in current.items():
+            for name, v in metrics.items():
+                reg.gauge(name, row=key).set(v)
+        print(f"metrics -> {reg.write_jsonl(args.metrics_out)}")
+
+    if args.update:
+        os.makedirs(os.path.dirname(BASELINE), exist_ok=True)
+        with open(BASELINE, "w") as f:
+            json.dump(current, f, indent=1, sort_keys=True)
+        print(f"baseline updated -> {BASELINE} ({len(current)} rows)")
+        return 0
+
+    if not os.path.exists(BASELINE):
+        print(f"FAIL: no baseline at {BASELINE}; run --update and commit it")
+        return 1
+    with open(BASELINE) as f:
+        baseline = json.load(f)
+    failures = check(current, baseline)
+    for key in sorted(current):
+        m = current[key]
+        print(f"{key}: eqn10={m['lbm.bw.eqn10_fraction']:.4f} "
+              f"frontier={m['lbm.stream.frontier_frac']:.4f} "
+              f"idx_b/node={m['lbm.index.bytes_per_node']:.2f} "
+              f"eta_t={m['lbm.tiles.utilisation']:.4f}")
+    if failures:
+        print(f"\nFAIL ({len(failures)} regression(s)):")
+        for msg in failures:
+            print(f"  {msg}")
+        return 1
+    print(f"\nOK: {len(current)} rows within tolerance of the baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

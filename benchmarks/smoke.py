@@ -14,14 +14,27 @@ Three cheap probes (CI-budget sized, not paper-sized):
 """
 from __future__ import annotations
 
+import sys
+
 from benchmarks import channel_utilisation
 from benchmarks.common import timed_mflups
+from repro import obs
 from repro.data.geometry import cavity3d
 
 
-def main():
+def export_run(reg: obs.MetricRegistry, res, config: str) -> None:
+    """Copy one TimedRun's private gauges into the export registry,
+    labelled by configuration (the CI metrics artifact)."""
+    for rec in res.metrics.snapshot():
+        if rec["type"] == "gauge":
+            reg.gauge(rec["name"], config=config).set(rec["value"])
+
+
+def main(metrics_out: str | None = None):
+    reg = obs.MetricRegistry()
     channel_utilisation.main()
     res = timed_mflups(cavity3d(16), steps=3, warmup=1, backend="fused")
+    export_run(reg, res, "fused_cavity16")
     assert res.mflups > 0 and res.mflups_dispatch > 0
     assert res.eng.cfg.backend == "fused"
     print(f"fused_smoke,cavity16,mflups={res.mflups:.4f},"
@@ -36,6 +49,7 @@ def main():
         case.geometry, steps=3, warmup=1, backend="gather",
         lattice=case.lattice, periodic=case.periodic, force=case.force,
         split_stream=True, node_order="frontier_last")
+    export_run(reg, res, "split_channel2d")
     tabs = res.eng.tables
     assert res.mflups > 0 and res.bandwidth_gbs > 0
     assert tabs.frontier_frac < 0.5, tabs.frontier_frac
@@ -46,8 +60,10 @@ def main():
           f"frontier={tabs.frontier_frac:.3f},"
           f"index_ratio="
           f"{tabs.index_entries_mono / tabs.split.index_entries:.1f}")
+    if metrics_out:
+        print(f"metrics -> {reg.write_jsonl(metrics_out)}")
     print("# benchmark smoke OK")
 
 
 if __name__ == "__main__":
-    main()
+    main(metrics_out=sys.argv[1] if len(sys.argv) > 1 else None)

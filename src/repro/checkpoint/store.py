@@ -32,6 +32,8 @@ import time
 import jax
 import numpy as np
 
+from repro import obs
+
 COMMITTED = "COMMITTED"
 _MAX_SHARD_BYTES = 1 << 30
 
@@ -65,6 +67,10 @@ class CheckpointStore:
         """trees: {"params": pytree, "opt_state": pytree, ...} — saved
         gathered/unsharded.  extra: JSON-serialisable metadata (rng seed,
         data cursor...).  Blocking; see save_async."""
+        with obs.get_tracer().span("ckpt.save", step=step):
+            return self._save(step, trees, extra)
+
+    def _save(self, step: int, trees: dict, extra: dict | None = None) -> str:
         d = os.path.join(self.root, f"step_{step:09d}")
         tmp = d + ".tmp"
         if os.path.exists(tmp):
@@ -113,6 +119,15 @@ class CheckpointStore:
             shutil.rmtree(d)
         os.rename(tmp, d)
         self._gc()
+        reg = obs.get_metrics()
+        if reg.enabled:
+            total = sum(
+                int(np.prod(meta["shape"])) * np.dtype(meta["dtype"]).itemsize
+                for entry in manifest["trees"].values()
+                for meta in entry.values())
+            reg.counter("ckpt.save_total").inc()
+            reg.counter("ckpt.save.bytes_total").inc(total)
+            reg.gauge("ckpt.save.seconds").set(time.time() - manifest["time"])
         return d
 
     def save_async(self, step: int, trees: dict, extra: dict | None = None):
@@ -172,6 +187,14 @@ class CheckpointStore:
         """Restore trees shaped like `tree_likes` ({name: pytree of arrays or
         ShapeDtypeStructs}).  `shardings` optionally maps tree name -> a
         sharding pytree; leaves are device_put with it (elastic re-shard)."""
+        reg = obs.get_metrics()
+        if reg.enabled:
+            reg.counter("ckpt.restore_total").inc()
+        with obs.get_tracer().span("ckpt.restore", step=step):
+            return self._restore(step, tree_likes, shardings)
+
+    def _restore(self, step: int, tree_likes: dict,
+                 shardings: dict | None = None):
         d = os.path.join(self.root, f"step_{step:09d}")
         assert os.path.exists(os.path.join(d, COMMITTED)), f"torn checkpoint {d}"
         with open(os.path.join(d, "manifest.json")) as f:

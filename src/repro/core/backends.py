@@ -49,6 +49,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs.trace import phase_scope
+
 from . import collision as col
 from .boundary import apply_open_boundary
 from .streaming import StreamTables
@@ -115,24 +117,28 @@ def apply_split_stream(f_store, solid, *, intra, is_cross, nbr, case,
     q, t, n = f_store.shape
     m = t * n
     flat = f_store.reshape(-1)
-    # ---- interior: (Q, n) static permutation broadcast over tiles
-    f_in = jnp.take_along_axis(f_store, intra[:, None, :], axis=-1)
-    # ---- frontier, regular cross links: computed indices, no per-link table
-    src_tile = jnp.moveaxis(jnp.take(nbr, case, axis=1), 0, 1)   # (Q, T, n)
-    idx = (jnp.arange(q, dtype=src_tile.dtype)[:, None, None] * m
-           + src_tile * n + intra[:, None, :])
-    f_cross = jnp.take(flat, idx.reshape(-1)).reshape(q, t, n)
-    f_in = jnp.where(is_cross[:, None, :], f_cross, f_in).reshape(-1)
-    # ---- frontier, bounce links: dst list only; src recomputed on the fly
-    if bounce_dst.size:
-        dq, rem = jnp.divmod(bounce_dst, m)
-        dt_, ds = jnp.divmod(rem, n)
-        src = opp[dq] * m + dt_ * n + perms.reshape(-1)[opp[dq] * n + ds]
-        f_in = f_in.at[bounce_dst].set(jnp.take(flat, src))
-    # ---- frontier, irregular links: explicit (dst, src) pairs
-    if irregular_dst.size:
-        f_in = f_in.at[irregular_dst].set(jnp.take(flat, irregular_src))
-    f_in = f_in.reshape(q, t, n)
+    with phase_scope("lbm.phase.stream_interior"):
+        # ---- interior: (Q, n) static permutation broadcast over tiles
+        f_in = jnp.take_along_axis(f_store, intra[:, None, :], axis=-1)
+    with phase_scope("lbm.phase.stream_frontier"):
+        # ---- frontier, regular cross links: computed indices, no
+        # per-link table
+        src_tile = jnp.moveaxis(jnp.take(nbr, case, axis=1), 0, 1)  # (Q,T,n)
+        idx = (jnp.arange(q, dtype=src_tile.dtype)[:, None, None] * m
+               + src_tile * n + intra[:, None, :])
+        f_cross = jnp.take(flat, idx.reshape(-1)).reshape(q, t, n)
+        f_in = jnp.where(is_cross[:, None, :], f_cross, f_in).reshape(-1)
+        # ---- frontier, bounce links: dst list only; src recomputed on
+        # the fly
+        if bounce_dst.size:
+            dq, rem = jnp.divmod(bounce_dst, m)
+            dt_, ds = jnp.divmod(rem, n)
+            src = opp[dq] * m + dt_ * n + perms.reshape(-1)[opp[dq] * n + ds]
+            f_in = f_in.at[bounce_dst].set(jnp.take(flat, src))
+        # ---- frontier, irregular links: explicit (dst, src) pairs
+        if irregular_dst.size:
+            f_in = f_in.at[irregular_dst].set(jnp.take(flat, irregular_src))
+        f_in = f_in.reshape(q, t, n)
     return jnp.where(solid[None], 0.0, f_in)
 
 
@@ -148,13 +154,14 @@ def nebb_boundary_pass(f_pre, out, lat, collision_cfg, force, specs,
     backend's in-line application.
     """
     q, n = out.shape[-2], out.shape[-1]
-    f_in = jnp.take(f_pre.reshape(-1), gather.reshape(-1),
-                    axis=0).reshape(q, -1, n)           # (Q, B, n)
-    for mask, spec in zip(type_masks, specs):
-        f_in = apply_open_boundary(f_in, mask, spec, lat)
-    f_out, _, _ = col.collide(f_in, lat, collision_cfg, force)
-    f_out = jnp.where(solid[None], 0.0, f_out)
-    return out.at[tiles].set(jnp.moveaxis(f_out, 0, 1))
+    with phase_scope("lbm.phase.boundary"):
+        f_in = jnp.take(f_pre.reshape(-1), gather.reshape(-1),
+                        axis=0).reshape(q, -1, n)           # (Q, B, n)
+        for mask, spec in zip(type_masks, specs):
+            f_in = apply_open_boundary(f_in, mask, spec, lat)
+        f_out, _, _ = col.collide(f_in, lat, collision_cfg, force)
+        f_out = jnp.where(solid[None], 0.0, f_out)
+        return out.at[tiles].set(jnp.moveaxis(f_out, 0, 1))
 
 
 class GatherBackend:
@@ -243,16 +250,20 @@ class GatherBackend:
             f_in = apply_split_stream(f_store, self._solid, **self._split)
         else:
             # streaming + bounce-back: one gather per direction
-            f_in = jnp.take(f_store.reshape(-1), self._gather,
-                            axis=0).reshape(q, t, n)
+            with phase_scope("lbm.phase.stream"):
+                f_in = jnp.take(f_store.reshape(-1), self._gather,
+                                axis=0).reshape(q, t, n)
         if self.cfg.kernel_mode == "propagation_only":
             return self.to_storage(f_in)
         # open boundaries (Zou-He NEBB / constant pressure)
-        for mask, spec in self._bc_masks:
-            f_in = apply_open_boundary(f_in, mask, spec, self.lat)
-        f_out = self._collide(f_in)
-        f_out = jnp.where(self._solid[None], 0.0, f_out)
-        return self.to_storage(f_out)
+        with phase_scope("lbm.phase.boundary"):
+            for mask, spec in self._bc_masks:
+                f_in = apply_open_boundary(f_in, mask, spec, self.lat)
+        with phase_scope("lbm.phase.collide"):
+            f_out = self._collide(f_in)
+        with phase_scope("lbm.phase.pack"):
+            f_out = jnp.where(self._solid[None], 0.0, f_out)
+            return self.to_storage(f_out)
 
     # ------------------------------------------------- ensemble (B states)
     def ensemble_state(self, f_single: jnp.ndarray, batch: int) -> jnp.ndarray:
@@ -348,10 +359,11 @@ class FusedBackend:
         from repro.kernels.stream_collide import stream_collide_tiles
 
         cfg = self.cfg
-        out = stream_collide_tiles(
-            f, self._types, self._nbrs, self.lat, cfg.collision,
-            a=cfg.a, force=cfg.force, interpret=self.interpret,
-            mode=cfg.kernel_mode, node_order=cfg.node_order)
+        with phase_scope("lbm.phase.stream_collide"):
+            out = stream_collide_tiles(
+                f, self._types, self._nbrs, self.lat, cfg.collision,
+                a=cfg.a, force=cfg.force, interpret=self.interpret,
+                mode=cfg.kernel_mode, node_order=cfg.node_order)
         if self._bc is not None:
             tab = self._bc
             out = nebb_boundary_pass(
@@ -407,10 +419,11 @@ class FusedBackend:
         cfg = self.cfg
         batch = (f.shape[0] - 1) // self.tiling.num_tiles
         types, nbrs, bc = self._ensemble_tables(batch)
-        out = stream_collide_tiles(
-            f, types, nbrs, self.lat, cfg.collision,
-            a=cfg.a, force=cfg.force, interpret=self.interpret,
-            mode=cfg.kernel_mode, node_order=cfg.node_order)
+        with phase_scope("lbm.phase.stream_collide"):
+            out = stream_collide_tiles(
+                f, types, nbrs, self.lat, cfg.collision,
+                a=cfg.a, force=cfg.force, interpret=self.interpret,
+                mode=cfg.kernel_mode, node_order=cfg.node_order)
         if bc is not None:
             out = nebb_boundary_pass(
                 f, out, self.lat, cfg.collision, cfg.force, bc["specs"],

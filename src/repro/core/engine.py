@@ -40,6 +40,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
+
 from . import collision as col
 from .backends import BACKENDS, make_backend
 from .boundary import BoundarySpec
@@ -172,6 +174,9 @@ class SparseTiledLBM:
     def step(self, steps: int = 1) -> None:
         for _ in range(steps):
             self.f = self._step_fn(self.f)
+        reg = obs.get_metrics()
+        if reg.enabled:
+            reg.counter("lbm.step_total").inc(steps)
 
     def run(self, steps: int) -> None:
         """Run ``steps`` iterations inside a single jitted fori_loop."""
@@ -183,7 +188,12 @@ class SparseTiledLBM:
                 donate_argnums=0,
             )
             self._multi_cache[steps] = fn
-        self.f = self._multi_cache[steps](self.f)
+        tr = obs.get_tracer()
+        with tr.span("lbm.run", steps=steps), obs.annotation("lbm.run"):
+            self.f = self._multi_cache[steps](self.f)
+        reg = obs.get_metrics()
+        if reg.enabled:
+            reg.counter("lbm.step_total").inc(steps)
 
     # ----------------------------------------------------------- diagnostics
     def macroscopics(self):
@@ -233,3 +243,30 @@ class SparseTiledLBM:
 
     def mflups(self, seconds_per_step: float) -> float:
         return self.n_fluid_nodes / seconds_per_step / 1e6
+
+    def model_metrics(self) -> dict[str, float]:
+        """Modelled per-step quantities under the CANONICAL metric names
+        (``repro.obs.metrics.CATALOGUE``).
+
+        Everything here is computed from static host tables — no jit, no
+        device work, fully deterministic for deterministic geometries —
+        which is what lets ``benchmarks/regression_gate.py`` gate on these
+        numbers in CPU CI, and lets the dry-run report and the measured
+        runtime share one naming scheme (modelled-vs-measured comparison
+        is a single key join).
+        """
+        q, nf = self.lat.q, self.n_fluid_nodes
+        min_bytes = 2 * q * nf * self.dtype.itemsize     # paper Eqn (10)
+        idx = self.index_bytes_per_step()
+        actual = self.bytes_per_step() + idx
+        t = self.tables
+        return {
+            "lbm.bw.eqn10_min_bytes": float(min_bytes),
+            "lbm.bw.eqn10_fraction": min_bytes / max(1, actual),
+            "lbm.bytes.model_per_node": actual / max(1, nf),
+            "lbm.index.bytes_per_node": idx / max(1, nf),
+            "lbm.stream.interior_frac": float(t.interior_frac),
+            "lbm.stream.frontier_frac": float(t.frontier_frac),
+            "lbm.stream.bounce_frac": float(t.bounce_frac),
+            "lbm.tiles.utilisation": float(self.tiling.tile_utilisation),
+        }

@@ -56,11 +56,19 @@ class StepWatchdog:
 
     Straggler steps are excluded from the baseline window so a single slow
     step does not inflate the threshold for its successors.
+
+    When the global :mod:`repro.obs` registry is enabled (or a registry is
+    passed explicitly), every observation lands in
+    ``dist.watchdog.step_seconds`` and straggler trips are recorded both
+    as the ``dist.watchdog.straggler_total`` counter and a
+    ``dist.watchdog.straggler`` event carrying (step, seconds, ratio).
     """
 
-    def __init__(self, window: int = 10, threshold: float = 2.0):
+    def __init__(self, window: int = 10, threshold: float = 2.0,
+                 metrics=None):
         self.window = window
         self.threshold = threshold
+        self.metrics = metrics
         self._times: collections.deque = collections.deque(maxlen=window)
 
     def observe(self, step: int, seconds: float) -> StepReport:
@@ -72,8 +80,18 @@ class StepWatchdog:
         straggler = bool(ratio >= self.threshold)
         if not straggler:
             self._times.append(seconds)
+        reg = self.metrics
+        if reg is None:
+            from repro import obs
+            reg = obs.get_metrics()
+        if reg.enabled:
+            reg.gauge("dist.watchdog.step_seconds").set(seconds)
+            if straggler:
+                reg.counter("dist.watchdog.straggler_total").inc()
+                reg.event("dist.watchdog.straggler", step=step,
+                          seconds=seconds, ratio=ratio)
         return StepReport(step=step, seconds=seconds, ratio=ratio,
-                         is_straggler=straggler)
+                          is_straggler=straggler)
 
 
 @dataclasses.dataclass(frozen=True)

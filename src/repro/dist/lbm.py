@@ -44,6 +44,7 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import obs
 from repro.core import collision as col
 from repro.core.engine import LBMConfig, _resolve_interpret
 from repro.core.boundary import apply_open_boundary
@@ -532,16 +533,17 @@ class ShardedLBM:
             if d_cnt > 1:
                 # halo exchange: boundary tile layers travel one hop along
                 # the slab axis; padding slots land in the dummy tile
-                up = jax.lax.ppermute(f[:, tbl["su"][0]], "slab",
-                                      self._perm_up)
-                dn = jax.lax.ppermute(f[:, tbl["sd"][0]], "slab",
-                                      self._perm_dn)
-                ru, rum = tbl["ru"][0], tbl["rum"][0]
-                rd, rdm = tbl["rd"][0], tbl["rdm"][0]
-                f = f.at[:, ru].set(
-                    jnp.where(rum[None, :, None], up, f[:, ru]))
-                f = f.at[:, rd].set(
-                    jnp.where(rdm[None, :, None], dn, f[:, rd]))
+                with obs.phase_scope("lbm.phase.halo"):
+                    up = jax.lax.ppermute(f[:, tbl["su"][0]], "slab",
+                                          self._perm_up)
+                    dn = jax.lax.ppermute(f[:, tbl["sd"][0]], "slab",
+                                          self._perm_dn)
+                    ru, rum = tbl["ru"][0], tbl["rum"][0]
+                    rd, rdm = tbl["rd"][0], tbl["rdm"][0]
+                    f = f.at[:, ru].set(
+                        jnp.where(rum[None, :, None], up, f[:, ru]))
+                    f = f.at[:, rd].set(
+                        jnp.where(rdm[None, :, None], dn, f[:, rd]))
             if cfg.kernel_mode == "rw_only":
                 return (f + 0.0)[None]
             if cfg.split_stream:
@@ -553,14 +555,19 @@ class ShardedLBM:
                     irregular_dst=tbl["sp_idst"][0],
                     irregular_src=tbl["sp_isrc"][0], **self._split_static)
             else:
-                f_in = jnp.take(f.reshape(-1), tbl["gather"][0].reshape(-1),
-                                axis=0).reshape(q, tp, n)
+                with obs.phase_scope("lbm.phase.stream"):
+                    f_in = jnp.take(f.reshape(-1),
+                                    tbl["gather"][0].reshape(-1),
+                                    axis=0).reshape(q, tp, n)
             if cfg.kernel_mode == "propagation_only":
                 return self._to_storage(f_in)[None]
-            for i, (_, spec) in enumerate(cfg.boundaries):
-                f_in = apply_open_boundary(f_in, tbl["bc"][i][0], spec, lat)
+            with obs.phase_scope("lbm.phase.boundary"):
+                for i, (_, spec) in enumerate(cfg.boundaries):
+                    f_in = apply_open_boundary(f_in, tbl["bc"][i][0], spec,
+                                               lat)
             solid = tbl["solid"][0]
-            f_out = self._collide(f_in, solid)
+            with obs.phase_scope("lbm.phase.collide"):
+                f_out = self._collide(f_in, solid)
             f_out = jnp.where(solid[None], 0.0, f_out)
             return self._to_storage(f_out)[None]
 
@@ -572,16 +579,20 @@ class ShardedLBM:
             f = f[0]                                      # (Tp, Q, n)
             if d_cnt > 1:
                 # halo exchange slices whole tile rows — no layout shuffle
-                up = jax.lax.ppermute(f[tbl["su"][0]], "slab", self._perm_up)
-                dn = jax.lax.ppermute(f[tbl["sd"][0]], "slab", self._perm_dn)
-                ru, rum = tbl["ru"][0], tbl["rum"][0]
-                rd, rdm = tbl["rd"][0], tbl["rdm"][0]
-                f = f.at[ru].set(jnp.where(rum[:, None, None], up, f[ru]))
-                f = f.at[rd].set(jnp.where(rdm[:, None, None], dn, f[rd]))
-            out = stream_collide_tiles(
-                f, tbl["types"][0], tbl["nbrs"][0], lat, cfg.collision,
-                a=cfg.a, force=cfg.force, interpret=self.kernel_interpret,
-                mode=cfg.kernel_mode, node_order=cfg.node_order)
+                with obs.phase_scope("lbm.phase.halo"):
+                    up = jax.lax.ppermute(f[tbl["su"][0]], "slab",
+                                          self._perm_up)
+                    dn = jax.lax.ppermute(f[tbl["sd"][0]], "slab",
+                                          self._perm_dn)
+                    ru, rum = tbl["ru"][0], tbl["rum"][0]
+                    rd, rdm = tbl["rd"][0], tbl["rdm"][0]
+                    f = f.at[ru].set(jnp.where(rum[:, None, None], up, f[ru]))
+                    f = f.at[rd].set(jnp.where(rdm[:, None, None], dn, f[rd]))
+            with obs.phase_scope("lbm.phase.stream_collide"):
+                out = stream_collide_tiles(
+                    f, tbl["types"][0], tbl["nbrs"][0], lat, cfg.collision,
+                    a=cfg.a, force=cfg.force, interpret=self.kernel_interpret,
+                    mode=cfg.kernel_mode, node_order=cfg.node_order)
             if "bcg" in tbl:
                 # masked NEBB pass (shared with FusedBackend): re-stream +
                 # rebuild + collide ONLY the boundary tiles, pre-step state
@@ -612,6 +623,7 @@ class ShardedLBM:
     def step(self, steps: int = 1) -> None:
         for _ in range(steps):
             self.f = self._step_fn(self.f, self._tbl)
+        self._record_steps(steps)
 
     def run(self, steps: int) -> None:
         """``steps`` iterations inside one jitted fori_loop."""
@@ -620,7 +632,20 @@ class ShardedLBM:
                 lambda f, tbl: jax.lax.fori_loop(
                     0, steps, lambda i, x: self._raw_step(x, tbl), f),
                 donate_argnums=0)
-        self.f = self._multi_cache[steps](self.f, self._tbl)
+        tr = obs.get_tracer()
+        with tr.span("lbm.run", steps=steps, sharded=True), \
+                obs.annotation("lbm.run"):
+            self.f = self._multi_cache[steps](self.f, self._tbl)
+        self._record_steps(steps)
+
+    def _record_steps(self, steps: int) -> None:
+        reg = obs.get_metrics()
+        if reg.enabled:
+            reg.counter("lbm.step_total").inc(steps)
+            halo = self.halo_bytes_per_step()
+            if halo:
+                reg.gauge("dist.halo.bytes").set(halo)
+                reg.counter("dist.halo.bytes_total").inc(halo * steps)
 
     def lower_step(self):
         """Lower one step on abstract operands (dry-run: nothing allocated)."""
@@ -664,6 +689,57 @@ class ShardedLBM:
         stored = sum(t.num_tiles * t.nodes_per_tile
                      for t in self.plan.local_tilings)
         return 2 * self.lat.q * n_d * stored
+
+    def halo_bytes_per_step(self) -> int:
+        """Bytes moved by the per-step ppermute halo exchange, summed over
+        all devices (each exchanged boundary tile layer is a (q, h, n)
+        slab row of f; h is padded to the widest layer)."""
+        if self.plan.n_dev <= 1:
+            return 0
+        h = self._tbl_np["su"].shape[1]
+        per_hop = self.lat.q * h * self.plan.nodes_per_tile * \
+            self.dtype.itemsize
+        return (len(self._perm_up) + len(self._perm_dn)) * per_hop
+
+    def index_bytes_per_step(self) -> int:
+        """Indirection-table bytes loaded per step across all devices
+        (mirrors ``SparseTiledLBM.index_bytes_per_step`` per slab)."""
+        q, n = self.lat.q, self.plan.nodes_per_tile
+        d_cnt = self.plan.n_dev
+        tbl = self._tbl_np
+        if self.fused:
+            # per-slab neighbour tables + one static (Q, n) perm/case pair
+            # per device (closure constants of the kernel)
+            return tbl["nbrs"].nbytes + d_cnt * (q * n * 4 + q * n * 1)
+        if self.cfg.split_stream:
+            frontier = sum(tbl[k].nbytes
+                           for k in ("sp_nbr", "sp_bdst", "sp_idst",
+                                     "sp_isrc"))
+            static = d_cnt * (q * n * 4 + q * n * 4 + q * n * 1)
+            return frontier + static          # intra + case + is_cross
+        return tbl["gather"].nbytes
+
+    def model_metrics(self) -> dict[str, float]:
+        """Modelled per-step quantities under the canonical metric names
+        (same scheme as ``SparseTiledLBM.model_metrics``, plus the halo
+        traffic the slab decomposition adds)."""
+        q, nf = self.lat.q, self.plan.n_fluid_own
+        min_bytes = 2 * q * nf * self.dtype.itemsize     # paper Eqn (10)
+        idx = self.index_bytes_per_step()
+        halo = self.halo_bytes_per_step()
+        actual = self.bytes_per_step() + idx + halo
+        fr = self.stream_fracs
+        return {
+            "lbm.bw.eqn10_min_bytes": float(min_bytes),
+            "lbm.bw.eqn10_fraction": min_bytes / max(1, actual),
+            "lbm.bytes.model_per_node": actual / max(1, nf),
+            "lbm.index.bytes_per_node": idx / max(1, nf),
+            "lbm.stream.interior_frac": float(fr["interior_frac"]),
+            "lbm.stream.frontier_frac": float(fr["frontier_frac"]),
+            "lbm.stream.bounce_frac": float(fr["bounce_frac"]),
+            "lbm.tiles.utilisation": float(self.plan.tile_utilisation),
+            "dist.halo.bytes": float(halo),
+        }
 
     def mflups(self, seconds_per_step: float) -> float:
         return self.plan.n_fluid_own / seconds_per_step / 1e6

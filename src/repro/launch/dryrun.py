@@ -187,6 +187,10 @@ def main(argv=None):
     ap.add_argument("--all", action="store_true",
                     help="run every (arch x shape) cell")
     ap.add_argument("--out", default=None, help="JSON output path")
+    ap.add_argument("--metrics-out", default=None, dest="metrics_out",
+                    help="emit per-cell roofline terms as obs-style "
+                         "JSONL gauges (dryrun.* names, labelled by "
+                         "arch/shape/mesh)")
     args = ap.parse_args(argv)
 
     todo = []
@@ -218,6 +222,20 @@ def main(argv=None):
         with open(args.out, "w") as f:
             json.dump(results, f, indent=1)
         print(f"wrote {args.out} ({len(results)} cells, {failures} failures)")
+    if args.metrics_out:
+        from repro.obs import MetricRegistry
+
+        reg = MetricRegistry()
+        for r in results:
+            labels = {"arch": r.get("arch", "?"), "shape": r.get("shape", "?"),
+                      "mesh": r.get("mesh", "?")}
+            reg.gauge("dryrun.ok", **labels).set(1.0 if r.get("ok") else 0.0)
+            for key in ("t_compute", "t_memory", "t_collective",
+                        "roofline_fraction", "useful_flops_ratio",
+                        "hbm_need"):
+                if key in r:
+                    reg.gauge(f"dryrun.{key}", **labels).set(float(r[key]))
+        print(f"metrics -> {reg.write_jsonl(args.metrics_out)}")
     return 1 if failures else 0
 
 

@@ -24,6 +24,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import collision as C
 from repro.core.boundary import BoundarySpec
 from repro.core.engine import LBMConfig, SparseTiledLBM
@@ -155,6 +156,18 @@ def dryrun(multi_pod: bool, collision: str = "lbgk",
         "compile_s": round(dt, 1),
         "ok": True,
     }
+    # the SAME canonical metric names the measured runtime emits
+    # (repro.obs.metrics.CATALOGUE), so modelled-vs-measured comparison is
+    # a single key join — plus the HLO-derived dry-run-only figures
+    out["metrics"] = {
+        **eng.model_metrics(),
+        "lbm.bw.eqn10_fraction_hlo": out["bw_efficiency_model"],
+        "lbm.bytes.hlo_per_device": float(hc.bytes),
+    }
+    reg = obs.get_metrics()
+    if reg.enabled:
+        for name, v in out["metrics"].items():
+            reg.gauge(name, mesh=out["mesh"]).set(v)
     if verbose:
         print(f"[LBM x {out['mesh']}] OK slabs={out['slabs']} "
               f"geom={out['geometry']} fluid={n_own:,}")
@@ -202,11 +215,22 @@ def run_local(args):
     eng.run(args.steps)  # compile the fori_loop + warm
     jax.block_until_ready(eng.f)
     eng.reset()          # back to t=0: the timed run IS the reported physics
+    obs.get_tracer().reset()       # drop warmup spans from the trace
     t0 = time.time()
     eng.run(args.steps)  # timed: one dispatch for the whole loop
     jax.block_until_ready(eng.f)
     dt = time.time() - t0
     mflups = n_fluid * args.steps / dt / 1e6
+    reg = obs.get_metrics()
+    if reg.enabled:
+        model = eng.model_metrics()
+        for name, v in model.items():
+            reg.gauge(name, case=args.case).set(v)
+        reg.gauge("lbm.step.mflups", case=args.case).set(mflups)
+        reg.gauge("lbm.step.seconds", case=args.case).set(dt / args.steps)
+        reg.gauge("lbm.bw.achieved_gbs", case=args.case).set(
+            model["lbm.bw.eqn10_min_bytes"] / (dt / args.steps) / 1e9)
+        reg.gauge("lbm.mass.total", case=args.case).set(eng.total_mass())
     stream = "split" if args.split_stream else "mono"
     print(f"case={args.case} backend={args.backend} order={args.order} "
           f"node_order={args.node_order} stream={stream} "
@@ -242,10 +266,22 @@ def main(argv=None):
     ap.add_argument("--backend", default="gather",
                     choices=["gather", "fused"])
     ap.add_argument("--out", default=None)
+    ap.add_argument("--metrics-out", default=None, dest="metrics_out",
+                    help="write the obs metric registry as JSONL here")
+    ap.add_argument("--trace", default=None,
+                    help="write a Chrome-trace JSON (perfetto-loadable) "
+                         "here; also enables jax named-scope phase names")
     args = ap.parse_args(argv)
 
+    if args.metrics_out or args.trace:
+        # enable BEFORE any engine is built so named scopes reach the
+        # traced step and construction spans are captured
+        obs.enable(metrics=True, trace=bool(args.trace))
+
     if not args.dryrun:
-        return run_local(args)
+        rc = run_local(args) or 0
+        write_obs_outputs(args)
+        return rc
     meshes = {"single": [False], "multi": [True],
               "both": [False, True]}[args.mesh]
     results = [dryrun(mp, args.collision, args.fluid,
@@ -255,7 +291,17 @@ def main(argv=None):
         os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
         with open(args.out, "w") as f:
             json.dump(results, f, indent=1)
+    write_obs_outputs(args)
     return 0
+
+
+def write_obs_outputs(args) -> None:
+    """Export the global obs collectors per the CLI flags (shared with
+    ``repro.launch.sim_serve``)."""
+    if getattr(args, "metrics_out", None):
+        print(f"metrics -> {obs.get_metrics().write_jsonl(args.metrics_out)}")
+    if getattr(args, "trace", None):
+        print(f"trace -> {obs.get_tracer().save(args.trace)}")
 
 
 if __name__ == "__main__":

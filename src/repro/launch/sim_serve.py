@@ -23,9 +23,10 @@ import os
 import sys
 import time
 
+from repro import obs
 from repro.core import collision as C
 from repro.core.engine import LBMConfig
-from repro.launch.lbm import CASES, make_case
+from repro.launch.lbm import CASES, make_case, write_obs_outputs
 from repro.sim.service import SimService
 
 
@@ -134,7 +135,19 @@ def main(argv=None):
                     help="resume every session from the latest committed "
                          "checkpoint under --checkpoint-root")
     ap.add_argument("--out", default=None)
+    ap.add_argument("--metrics-out", default=None, dest="metrics_out",
+                    help="write the obs metric registry as JSONL here "
+                         "(per-tenant counters, aggregate MFLUPS, "
+                         "modelled bandwidth fractions per group)")
+    ap.add_argument("--trace", default=None,
+                    help="write a Chrome-trace JSON (perfetto-loadable) "
+                         "of the nested serving spans here")
     args = ap.parse_args(argv)
+
+    if args.metrics_out or args.trace:
+        # enable BEFORE the service is built so admission/step spans and
+        # engine-construction metrics are captured
+        obs.enable(metrics=True, trace=bool(args.trace))
 
     if args.restore:
         assert args.checkpoint_root, "--restore needs --checkpoint-root"
@@ -167,6 +180,7 @@ def main(argv=None):
         os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
         with open(args.out, "w") as f:
             json.dump(results, f, indent=1)
+    write_obs_outputs(args)
     return 0
 
 

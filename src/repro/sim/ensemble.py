@@ -31,6 +31,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import collision as col
 from repro.core.engine import SparseTiledLBM
 
@@ -82,8 +83,13 @@ class EnsembleLBM:
 
     # ----------------------------------------------------------------- step
     def step(self, steps: int = 1) -> None:
-        for _ in range(steps):
-            self.f = self._step_fn(self.f)
+        tr = obs.get_tracer()
+        with tr.span("lbm.ensemble.step", batch=self.batch, steps=steps):
+            for _ in range(steps):
+                self.f = self._step_fn(self.f)
+        reg = obs.get_metrics()
+        if reg.enabled:
+            reg.counter("lbm.step_total").inc(steps)
 
     def run(self, steps: int) -> None:
         """``steps`` iterations for all replicas inside one jitted
@@ -96,7 +102,13 @@ class EnsembleLBM:
                 donate_argnums=0,
             )
             self._multi_cache[steps] = fn
-        self.f = self._multi_cache[steps](self.f)
+        tr = obs.get_tracer()
+        with tr.span("lbm.ensemble.run", batch=self.batch, steps=steps), \
+                obs.annotation("lbm.ensemble.run"):
+            self.f = self._multi_cache[steps](self.f)
+        reg = obs.get_metrics()
+        if reg.enabled:
+            reg.counter("lbm.step_total").inc(steps)
 
     # ------------------------------------------------------------ state i/o
     def reset(self, b: int | None = None) -> None:

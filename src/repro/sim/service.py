@@ -25,9 +25,12 @@ it left off — and a torn save (no COMMITTED) is skipped by
 from __future__ import annotations
 
 import dataclasses
+import time
 
+import jax
 import numpy as np
 
+from repro import obs
 from repro.checkpoint.store import CheckpointStore
 from repro.core.engine import LBMConfig
 from repro.core.tiling import Tiling
@@ -74,6 +77,8 @@ class SimSession:
     steps_done: int = 0
     done: bool = False
     result: dict | None = None
+    # service-step index at submit time; queue-wait = seated_at - submitted_at
+    submitted_at: int = 0
     mass0: float | None = None         # recorded at first seating
     # canonical (Q, T, n) state to seat with (checkpoint restore); None
     # seats a fresh equilibrium state
@@ -112,6 +117,7 @@ class SimService:
         self.store = (CheckpointStore(checkpoint_root, keep=keep)
                       if checkpoint_root else None)
         self._next_sid = 0
+        self._service_steps = 0        # admission clock for queue-wait obs
         # resume numbering above any existing save: restarting at 0 in a
         # reused root would make the store's keep-newest gc delete the new
         # run's checkpoints and leave restore() resuming the stale run
@@ -143,7 +149,12 @@ class SimService:
             probe_indices(entry.engine.tiling, probes)
         self.queue.append(SimSession(sid=sid, geometry=geometry, cfg=cfg,
                                      max_steps=int(steps), probes=probes,
-                                     collect_fields=collect_fields))
+                                     collect_fields=collect_fields,
+                                     submitted_at=self._service_steps))
+        reg = obs.get_metrics()
+        if reg.enabled:
+            reg.counter("sim.session.submitted_total").inc()
+            reg.event("sim.session.submit", sid=sid, steps=int(steps))
         return sid
 
     def _session_key(self, sess: SimSession) -> tuple:
@@ -153,6 +164,7 @@ class SimService:
 
     def _admit(self) -> None:
         """Seat queued sessions into free slots (fixed-slot refill)."""
+        reg = obs.get_metrics()
         still = []
         for sess in self.queue:
             key = self._session_key(sess)
@@ -160,6 +172,12 @@ class SimService:
             if group is None:
                 entry = self.registry.get(sess.geometry, sess.cfg)
                 group = self.groups[key] = _Group(entry, self.slots)
+                if reg.enabled:
+                    # the group's modelled traffic numbers (bandwidth
+                    # fraction et al.) under the canonical names, labelled
+                    # by the geometry fingerprint prefix
+                    for name, v in entry.engine.model_metrics().items():
+                        reg.gauge(name, group=key[0][:8]).set(v)
             free = [i for i, s in enumerate(group.active) if s is None]
             if not free:
                 still.append(sess)
@@ -174,6 +192,13 @@ class SimService:
             group.active[slot] = sess
             if sess.mass0 is None:
                 sess.mass0 = group.ensemble.replica_mass(slot)
+            if reg.enabled:
+                reg.counter("sim.session.admitted_total").inc()
+                reg.histogram("sim.session.queue_wait_steps").observe(
+                    self._service_steps - sess.submitted_at)
+                reg.event("sim.session.admit", sid=sess.sid, slot=slot,
+                          group=key[0][:8],
+                          waited=self._service_steps - sess.submitted_at)
         self.queue = still
 
     def step(self, steps: int = 1) -> bool:
@@ -183,24 +208,54 @@ class SimService:
 
         Returns False when there is nothing left to do.
         """
+        reg = obs.get_metrics()
+        tr = obs.get_tracer()
         progressed = False
-        for _ in range(steps):
-            self._admit()
-            any_active = False
-            for group in self.groups.values():
-                occ = group.occupied
-                if not occ:
-                    continue
-                any_active = True
-                group.ensemble.step(1)
-                for slot in occ:
-                    sess = group.active[slot]
-                    sess.steps_done += 1
-                    if sess.steps_done >= sess.max_steps:
-                        self._finish(group, slot)
-            progressed |= any_active
-            if not any_active and not self.queue:
-                break
+        updates = 0
+        stepped: set = set()
+        t0 = time.perf_counter()
+        with tr.span("sim.service.step", steps=steps):
+            for _ in range(steps):
+                self._admit()
+                self._service_steps += 1
+                any_active = False
+                for key, group in self.groups.items():
+                    occ = group.occupied
+                    if not occ:
+                        continue
+                    any_active = True
+                    with tr.span("sim.group.step", group=key[0][:8],
+                                 occupied=len(occ)):
+                        group.ensemble.step(1)
+                    if reg.enabled:
+                        stepped.add(key)
+                        updates += len(occ) * group.ensemble.n_fluid_nodes
+                    for slot in occ:
+                        sess = group.active[slot]
+                        sess.steps_done += 1
+                        if reg.enabled:
+                            reg.counter("sim.session.steps_total",
+                                        sid=sess.sid).inc()
+                        if sess.steps_done >= sess.max_steps:
+                            self._finish(group, slot)
+                progressed |= any_active
+                if not any_active and not self.queue:
+                    break
+        if reg.enabled:
+            # sync before reading the clock: the dispatches above are
+            # async, so the window MFLUPS must wait for the device work.
+            # Disabled-path dispatch behaviour is untouched.
+            for key in stepped:
+                jax.block_until_ready(self.groups[key].ensemble.f)
+            wall = time.perf_counter() - t0
+            for key, group in self.groups.items():
+                reg.gauge("sim.slot.occupancy", group=key[0][:8]).set(
+                    len(group.occupied) / max(1, len(group.active)))
+            if updates:
+                reg.counter("sim.node_updates_total").inc(updates)
+                if wall > 0:
+                    reg.gauge("sim.service.window_mflups").set(
+                        updates / wall / 1e6)
         return progressed or bool(self.queue)
 
     def run(self, max_steps: int | None = None,
@@ -290,6 +345,14 @@ class SimService:
         sess.done = True
         self.finished.append(sess)
         group.active[slot] = None
+        reg = obs.get_metrics()
+        if reg.enabled:
+            reg.counter("sim.session.finished_total").inc()
+            reg.gauge("lbm.mass.drift", sid=sess.sid).set(
+                result["mass_drift"])
+            reg.event("sim.session.finish", sid=sess.sid,
+                      steps=sess.steps_done,
+                      mass_drift=result["mass_drift"])
 
     # ------------------------------------------------------------ checkpoint
     def live_sessions(self) -> list[tuple[SimSession, np.ndarray | None]]:

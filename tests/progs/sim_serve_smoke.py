@@ -9,9 +9,13 @@ Asserts:
 * every session ran exactly its step budget across the kill/restore,
 * per-session mass conservation to 1e-12 (closed/periodic geometries,
   float64),
-* the slot-refill path ran (3 sessions through 2 slots in one group).
+* the slot-refill path ran (3 sessions through 2 slots in one group),
+* the obs registry saw every finish and its per-session
+  ``lbm.mass.drift`` gauges agree with the results (drift < 1e-12).
 
-Run:  PYTHONPATH=src python tests/progs/sim_serve_smoke.py
+Run:  PYTHONPATH=src python tests/progs/sim_serve_smoke.py [metrics.jsonl]
+(the optional argument exports the metric registry as JSONL, for CI
+artifact upload)
 """
 import os
 import sys
@@ -23,11 +27,13 @@ jax.config.update("jax_enable_x64", True)
 
 import numpy as np  # noqa: E402
 
+from repro import obs  # noqa: E402
 from repro.core.engine import LBMConfig  # noqa: E402
 from repro.sim.service import SimService  # noqa: E402
 
 
 def main():
+    obs.enable(trace=True, device_annotations=False)
     box = np.ones((8, 8, 8), np.uint8)           # periodic all-fluid box
     channel = np.ones((8, 8, 8), np.uint8)       # walled forced channel
     channel[:, 0, :] = 0
@@ -66,8 +72,23 @@ def main():
         assert probed["probes"][0]["rho"] > 0
         stats = svc2.registry.stats()
         assert stats["compiled_engines"] == 2
+
+        # --- obs: counters and the per-session mass-drift gauges must
+        # agree with the collected results (registry enabled up top)
+        reg = obs.get_metrics()
+        assert reg.value("sim.session.finished_total") == 3, reg.snapshot()
+        drifts = reg.values("lbm.mass.drift")
+        assert len(drifts) == 3, drifts
+        worst = max(drifts.values())
+        assert worst < 1e-12, f"mass-drift gauge regressed: {drifts}"
+        assert reg.value("ckpt.save_total") >= 1
+        assert reg.value("ckpt.restore_total") >= 1
+        assert obs.get_tracer().find("sim.service.step"), "no serving spans"
+        if len(sys.argv) > 1:
+            print(f"metrics -> {reg.write_jsonl(sys.argv[1])}")
     print("sim_serve_smoke OK: 3 sessions, 2 geometries, 2 compiled "
-          "engines, mass conserved across checkpointed restart")
+          "engines, mass conserved across checkpointed restart "
+          f"(max drift gauge {worst:.2e})")
     return 0
 
 
